@@ -1,0 +1,52 @@
+"""Fig 4 reproduction: throughput across models × precision × backend.
+
+The paper's measurement is tokens/s on an iPhone 15 Pro; this container
+has no A17, so the numbers come from the calibrated analytic model
+(core/cost_model + core/scheduler) over the same grid: six models,
+{F16, Q8, Q4}, {GPU, 1-6 CPU threads}. EXPERIMENTS.md compares the
+model's predictions against the paper's measured headline points.
+"""
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+from repro.configs.paper_models import PAPER_MODELS
+from repro.core import backend_throughput
+
+HEADLINES = {
+    # (model, backend, threads, fmt) -> paper-measured tk/s
+    ("llama3.2-1b", "cpu", 2, "f16"): 17.0,
+    ("llama3.2-1b", "gpu", 0, "f16"): 12.8,
+}
+
+
+def run() -> List[Tuple[str, float, str]]:
+    rows = []
+    for name, cfg in PAPER_MODELS.items():
+        mem_gb = cfg.param_count() * 2 / 1e9
+        for fmt in ("f16", "q8_0", "q4_0"):
+            if mem_gb > 6.5 and fmt in ("f16", "q8_0"):
+                # paper §5.1: 7B/8B F16+Q8 exceed the 8GB device (mmap
+                # failure) — reproduce the missing data points
+                rows.append((f"fig4/{name}/{fmt}/oom", 0.0, "mmap-fail"))
+                continue
+            t0 = time.perf_counter()
+            gpu = backend_throughput(cfg, "gpu", weight_format=fmt)
+            cpu_by_t = {t: backend_throughput(cfg, "cpu", threads=t,
+                                              weight_format=fmt)
+                        for t in range(1, 7)}
+            us = (time.perf_counter() - t0) * 1e6
+            best_t = max(cpu_by_t, key=cpu_by_t.get)
+            derived = (f"gpu={gpu:.1f}tk/s "
+                       f"cpu_best={cpu_by_t[best_t]:.1f}tk/s@{best_t}t "
+                       f"ratio={cpu_by_t[best_t] / gpu:.2f}")
+            rows.append((f"fig4/{name}/{fmt}", us, derived))
+    # headline check rows
+    for (name, backend, th, fmt), want in HEADLINES.items():
+        got = backend_throughput(PAPER_MODELS[name], backend,
+                                 threads=max(th, 1), weight_format=fmt)
+        rows.append((f"fig4/headline/{name}/{backend}{th}t", 0.0,
+                     f"pred={got:.1f} paper={want:.1f} "
+                     f"err={abs(got - want) / want * 100:.0f}%"))
+    return rows

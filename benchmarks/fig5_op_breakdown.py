@@ -1,0 +1,30 @@
+"""Fig 5 reproduction: op-class time shares, prefill vs decode.
+
+Paper (llama3.2-1B F16, A17 CPU): MUL_MAT = 87.6% prefill / 76.2%
+decode. Derived column reports our model's shares for the same setup.
+"""
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+from repro.configs.paper_models import LLAMA32_1B
+from repro.core import profile_phases
+
+PAPER = {"prefill": 0.876, "decode": 0.762}
+
+
+def run() -> List[Tuple[str, float, str]]:
+    t0 = time.perf_counter()
+    profs = profile_phases(LLAMA32_1B, threads=2)
+    us = (time.perf_counter() - t0) * 1e6
+    rows = []
+    for phase, prof in profs.items():
+        top = sorted(prof.by_op.items(), key=lambda kv: -kv[1])[:4]
+        shares = " ".join(f"{k}={v / prof.total_s * 100:.1f}%"
+                          for k, v in top)
+        rows.append((
+            f"fig5/{phase}", us / 2,
+            f"mul_mat={prof.mul_mat_share * 100:.1f}% "
+            f"(paper={PAPER[phase] * 100:.1f}%) | {shares}"))
+    return rows

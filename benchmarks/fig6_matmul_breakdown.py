@@ -1,0 +1,27 @@
+"""Fig 6 reproduction: per-matmul cost within a decoder layer.
+
+Paper: the FFN pair (ffn_up / ffn_down, plus gate) is the heaviest of
+the seven per-layer GEMMs in both phases.
+"""
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+from repro.configs.paper_models import LLAMA32_1B
+from repro.core import profile_phases
+
+
+def run() -> List[Tuple[str, float, str]]:
+    t0 = time.perf_counter()
+    profs = profile_phases(LLAMA32_1B, threads=2)
+    us = (time.perf_counter() - t0) * 1e6
+    rows = []
+    for phase, prof in profs.items():
+        total = sum(prof.by_matmul_tag.values())
+        parts = sorted(prof.by_matmul_tag.items(), key=lambda kv: -kv[1])
+        detail = " ".join(f"{k}={v / total * 100:.0f}%" for k, v in parts
+                          if k != "lm_head")
+        rows.append((f"fig6/{phase}", us / 2,
+                     f"dominant={prof.dominant_matmul()} | {detail}"))
+    return rows

@@ -1,0 +1,30 @@
+"""Figs 8-10 reproduction: the execution-version ladder V0-V3.
+
+Paper (llama3.2-1B F16): serial 11.5 → graph-parallel 13 →
+graph+tensor 15 → heterogeneous CPU+GPU 6 tk/s. On TPU the same
+structure appears as sharding rulesets v0-v3 (DESIGN.md §2); the
+mobile ladder here is the calibrated model, the TPU analogue is in
+roofline_table.py (v3's collective term explosion).
+"""
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+from repro.configs.paper_models import LLAMA32_1B
+from repro.core import simulate_version
+
+PAPER = {"v0": 11.5, "v1": 13.0, "v2": 15.0, "v3": 6.0}
+
+
+def run() -> List[Tuple[str, float, str]]:
+    rows = []
+    for v, want in PAPER.items():
+        t0 = time.perf_counter()
+        r = simulate_version(LLAMA32_1B, v, threads=4, kv_len=64)
+        us = (time.perf_counter() - t0) * 1e6
+        rows.append((
+            f"fig8-10/{v}", us,
+            f"pred={r.tokens_per_s:.1f}tk/s paper={want:.1f} "
+            f"({r.detail})"))
+    return rows

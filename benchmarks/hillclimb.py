@@ -1,0 +1,158 @@
+"""§Perf hillclimb driver (deliverable g/perf).
+
+Baselines come from results/dryrun_single_pod.json. This driver runs
+the named experiments — each a (config override | sharding ruleset)
+variant of one of the three chosen (arch × shape) pairs — and appends
+the measured roofline terms to results/hillclimb.json. EXPERIMENTS.md
+§Perf narrates the hypothesis → change → before/after for each.
+
+  PYTHONPATH=src python -m benchmarks.hillclimb --exp qwen_decode_tp2d
+  PYTHONPATH=src python -m benchmarks.hillclimb --all
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results",
+                       "hillclimb.json")
+
+# name -> (arch, shape, rules, overrides, hypothesis)
+EXPERIMENTS = {
+    # ---- pair 1: qwen1.5-110b x decode_32k (paper-representative:
+    # batch decode is the paper's core workload) ------------------------
+    "qwen_decode_baseline_v2": (
+        "qwen1.5-110b", "decode_32k", "v2", {},
+        "baseline: FSDP(embed@data) x TP(model) — paper-faithful v2"),
+    "qwen_decode_tp2d": (
+        "qwen1.5-110b", "decode_32k", "tp2d", {},
+        "FSDP all-gathers ~200GB of weights per decode step; full 2-D "
+        "TP should cut per-chip HBM traffic toward params/256 + cache "
+        "and leave only activation all-reduces"),
+    "qwen_decode_tp1d_q4": (
+        "qwen1.5-110b", "decode_32k", "tp1d",
+        {"quant_policy": "q4_0"},
+        "iteration 2 after tp2d refuted: 1-D TP on model only; weights "
+        "replicate across data, affordable at Q4 (3.9 GB/chip) — zero "
+        "weight collectives, only per-layer activation all-reduces; "
+        "predict memory ~5ms, collective ~4ms vs baseline 543ms step"),
+    "qwen_decode_tp1d_bf16": (
+        "qwen1.5-110b", "decode_32k", "tp1d", {},
+        "ablation: tp1d without quantization — 13.75 GB/chip of "
+        "replicated bf16 weights should blow the 16 GB HBM budget, "
+        "showing Q4 is what makes the decode sharding feasible"),
+    "qwen_decode_v2_q4": (
+        "qwen1.5-110b", "decode_32k", "v2",
+        {"quant_policy": "q4_0"},
+        "ablation: Q4 alone on the v2 baseline — quantization shrinks "
+        "the FSDP weight gathers too, separating the quant win from "
+        "the sharding win"),
+    # ---- pair 2: kimi-k2 x train_4k (most collective-bound combo) -----
+    "kimi_train_baseline_v2": (
+        "kimi-k2-1t-a32b", "train_4k", "v2", {},
+        "baseline: MoE dispatch resharding data->expert dominates"),
+    "kimi_train_cap10": (
+        "kimi-k2-1t-a32b", "train_4k", "v2", {"capacity_factor": 1.0},
+        "all-to-all bytes scale with expert capacity; cf 1.25->1.0 "
+        "should cut the collective term ~20% at the cost of more drops"),
+    "kimi_train_expert_data": (
+        "kimi-k2-1t-a32b", "train_4k", "v2e", {},
+        "shard experts over BOTH axes (384/256): each chip holds 1.5 "
+        "experts, the token buffer reshards once instead of "
+        "gather+scatter across model"),
+    # ---- pair 3: recurrentgemma-2b x train_4k (worst useful-flop
+    # ratio: the scan + local-attention mix) -----------------------------
+    "rg_train_baseline_v2": (
+        "recurrentgemma-2b", "train_4k", "v2", {},
+        "baseline hybrid training"),
+    "rg_train_noremat": (
+        "recurrentgemma-2b", "train_4k", "v2", {"remat": False},
+        "2.7B params fit easily at bs256; remat only burns 1/3 more "
+        "FLOPs here — turning it off should cut the compute term 25%"),
+    "rg_train_block1024": (
+        "recurrentgemma-2b", "train_4k", "v2",
+        {"attn_block": 1024, "remat": False},
+        "local window 2048 with 512-blocks scans 5 kv blocks/q-chunk; "
+        "1024-blocks scan 3 — fewer masked-out FLOPs and fewer "
+        "scan-carry writes"),
+    "rg_train_noseqpar": (
+        "recurrentgemma-2b", "train_4k", "v2ns", {"remat": False},
+        "iteration 2: the collective term survived remat-off, so it is "
+        "not gradient traffic; hypothesis: seq@model residuals fight "
+        "heads@model attention layouts, forcing an all-gather per "
+        "block. Dropping sequence parallelism (activations replicated "
+        "on seq, 168 MB/chip at bs256) should collapse the term"),
+    "kimi_train_v2ens": (
+        "kimi-k2-1t-a32b", "train_4k", "v2ens", {},
+        "iteration 3: combine 2-axis expert sharding (kills the "
+        "33.8 GB/layer expert-weight FSDP gathers) with no seq-parallel "
+        "residuals (kills the per-block activation resharding)"),
+    # ---- v3 regression, TPU analogue (paper Figs 8-10) ------------------
+    "qwen_decode_v3_regression": (
+        "qwen1.5-110b", "decode_32k", "v3", {},
+        "the paper's V3: attention and FFN sharded on different axes — "
+        "the collective term should explode vs v2, reproducing the "
+        "15->6 tk/s cliff structurally"),
+}
+
+
+def run_experiment(name: str) -> dict:
+    arch, shape, rules, overrides, hypothesis = EXPERIMENTS[name]
+    env = dict(os.environ, PYTHONPATH=os.path.join(
+        os.path.dirname(__file__), "..", "src"))
+    env.pop("XLA_FLAGS", None)
+    code = textwrap.dedent(f"""
+        from repro.launch.dryrun import run_one
+        import json
+        r = run_one({arch!r}, {shape!r}, rules_version={rules!r},
+                    overrides={overrides!r}, verbose=False)
+        print("RESULT::" + json.dumps(r, default=str))
+    """)
+    proc = subprocess.run([sys.executable, "-c", code],
+                          capture_output=True, text=True, env=env,
+                          timeout=3000)
+    for line in proc.stdout.splitlines():
+        if line.startswith("RESULT::"):
+            r = json.loads(line[len("RESULT::"):])
+            r["experiment"] = name
+            r["hypothesis"] = hypothesis
+            return r
+    return {"experiment": name, "ok": False,
+            "error": proc.stderr[-1500:]}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--exp", default=None)
+    ap.add_argument("--all", action="store_true")
+    args = ap.parse_args()
+    names = list(EXPERIMENTS) if args.all else [args.exp]
+    existing = []
+    if os.path.exists(RESULTS):
+        existing = json.load(open(RESULTS))
+    done = {r.get("experiment") for r in existing}
+    for name in names:
+        if name in done:
+            print(f"skip {name} (already in {RESULTS})")
+            continue
+        print(f"=== {name}")
+        r = run_experiment(name)
+        existing.append(r)
+        with open(RESULTS, "w") as f:
+            json.dump(existing, f, indent=1, default=str)
+        if r.get("ok"):
+            t = r["roofline"]
+            print(f"  compute={t['compute_s']:.2e} "
+                  f"memory={t['memory_s']:.2e} "
+                  f"collective={t['collective_s']:.2e} "
+                  f"dom={t['dominant']}")
+        else:
+            print("  FAILED:", r.get("error", "")[:300])
+
+
+if __name__ == "__main__":
+    main()

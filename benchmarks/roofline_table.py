@@ -1,0 +1,60 @@
+"""Roofline table (deliverable g): per (arch × shape) three-term
+roofline from the compiled dry-run artifacts.
+
+Reads results/dryrun_single_pod.json if the sweep has been run
+(PYTHONPATH=src python -m repro.launch.dryrun --all --out
+results/dryrun_single_pod.json); otherwise compiles a representative
+subset inline (kept small so benchmarks/run.py stays fast).
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import List, Tuple
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results",
+                       "dryrun_single_pod.json")
+
+_INLINE_SUBSET = [("deepseek-7b", "decode_32k"),
+                  ("mamba2-2.7b", "train_4k")]
+
+
+def _row(r) -> Tuple[str, float, str]:
+    name = f"roofline/{r['arch']}/{r['shape']}"
+    if not r.get("ok"):
+        return (name, 0.0, f"FAILED: {r.get('error', '?')[:80]}")
+    t = r["roofline"]
+    return (
+        name,
+        r.get("compile_s", 0.0) * 1e6,
+        (f"compute={t['compute_s']:.2e}s memory={t['memory_s']:.2e}s "
+         f"collective={t['collective_s']:.2e}s dom={t['dominant']} "
+         f"useful_flops={r['useful_flop_ratio'] * 100:.0f}% "
+         f"peak_gb={r.get('peak_bytes', 0) / 1e9:.1f}"))
+
+
+def run() -> List[Tuple[str, float, str]]:
+    if os.path.exists(RESULTS):
+        with open(RESULTS) as f:
+            results = json.load(f)
+        return [_row(r) for r in results]
+    # inline fallback: compile a 2-combo subset in a subprocess (the
+    # dry-run needs its own XLA_FLAGS before jax init)
+    import subprocess
+    import sys
+    rows = []
+    for arch, shape in _INLINE_SUBSET:
+        t0 = time.perf_counter()
+        proc = subprocess.run(
+            [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+             "--shape", shape],
+            capture_output=True, text=True,
+            env={**os.environ,
+                 "PYTHONPATH": os.path.join(os.path.dirname(__file__),
+                                            "..", "src")})
+        us = (time.perf_counter() - t0) * 1e6
+        ok = "1/1 combos compiled OK" in proc.stdout
+        rows.append((f"roofline/{arch}/{shape}", us,
+                     "compiled-ok" if ok else "FAILED"))
+    return rows

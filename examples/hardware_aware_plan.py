@@ -1,0 +1,33 @@
+"""The paper's §7.5 'hardware-aware execution strategy' as a tool:
+for each assigned architecture × input shape, print the planner's
+per-GEMM decisions (precision, kernel path, fusion) with the
+arithmetic-intensity napkin math that justifies them.
+
+  PYTHONPATH=src python examples/hardware_aware_plan.py --arch kimi-k2-1t-a32b
+"""
+import argparse
+
+from repro.configs import ASSIGNED_ARCHS, INPUT_SHAPES, get_config
+from repro.core import TPU_V5E, plan
+from repro.core.cost_model import a17_cpu
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="deepseek-7b",
+                    choices=list(ASSIGNED_ARCHS))
+    ap.add_argument("--hw", default="tpu", choices=["tpu", "a17"])
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    hw = TPU_V5E if args.hw == "tpu" else a17_cpu(4)
+    print(f"hardware={hw.name} ridge={hw.ridge_flops_per_byte:.0f} "
+          f"FLOP/byte\n")
+    for shape in INPUT_SHAPES.values():
+        p = plan(cfg, shape, hw)
+        print(p.summary())
+        print(f"  -> config overrides: {p.config_overrides()}\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,63 @@
+"""Quickstart: build an assigned architecture, run a train step, then
+serve a few tokens — the whole public API in ~40 lines.
+
+  PYTHONPATH=src python examples/quickstart.py [--arch deepseek-7b]
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ASSIGNED_ARCHS, get_config, reduced
+from repro.models import Model
+from repro.serving import Request, ServingEngine
+from repro.training import (AdamWConfig, TrainConfig, init_state,
+                            make_train_step)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="deepseek-7b",
+                    choices=list(ASSIGNED_ARCHS))
+    args = ap.parse_args()
+
+    # reduced variant of the assigned config (full configs are for the
+    # dry-run: python -m repro.launch.dryrun --arch <id> --shape <s>)
+    cfg = reduced(get_config(args.arch))
+    print(f"arch={cfg.name} type={cfg.arch_type} "
+          f"full-size params={get_config(args.arch).param_count() / 1e9:.1f}B")
+
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    # one training step
+    step = jax.jit(make_train_step(model, TrainConfig(
+        adamw=AdamWConfig(warmup_steps=1, total_steps=10))))
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (2, 16),
+                                          0, cfg.vocab_size)}
+    if cfg.arch_type == "audio":
+        batch["frames"] = jnp.zeros((2, cfg.encoder_seq_len, cfg.d_model),
+                                    jnp.bfloat16)
+    if cfg.arch_type == "vlm":
+        batch["prefix"] = jnp.zeros((2, cfg.num_prefix_embeddings,
+                                     cfg.d_model), jnp.bfloat16)
+    batch["labels"] = jnp.pad(batch["tokens"][:, 1:], ((0, 0), (0, 1)))
+    params, _, metrics = step(params, init_state(params), batch)
+    print(f"train step: loss={float(metrics['loss']):.3f}")
+
+    # serve a couple of requests (text-only archs)
+    if cfg.arch_type not in ("audio", "vlm"):
+        engine = ServingEngine(model, params, slots=2, max_len=64)
+        reqs = [Request(uid=i, prompt=np.arange(5, dtype=np.int32) + 1,
+                        max_new_tokens=8) for i in range(3)]
+        for r in reqs:
+            engine.submit(r)
+        engine.run()
+        print(f"served {engine.stats.tokens_generated} tokens; "
+              f"sample output: {reqs[0].output}")
+    print("quickstart OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Render EXPERIMENTS.md §Roofline table from the sweep JSON.
+
+  PYTHONPATH=src python scripts/render_roofline.py [results/dryrun_single_pod.json]
+"""
+import json
+import sys
+
+
+def bottleneck_fix(r) -> str:
+    """One sentence on what would move the dominant term down."""
+    dom = r["roofline"]["dominant"]
+    kind = r["kind"]
+    arch = r["arch"]
+    if dom == "collective":
+        if "moe" in arch or "kimi" in arch or "phi" in arch:
+            return ("cut all-to-all: lower capacity_factor / 2-D expert "
+                    "sharding")
+        if kind == "train":
+            return ("overlap grad all-reduce with bwd; reduce-scatter "
+                    "instead of all-gather+local")
+        return "decode-TP (tp2d) rules: stop FSDP weight gathers per step"
+    if dom == "memory":
+        if kind in ("decode",):
+            return "quantize weights (q4_0) and/or KV cache to int8"
+        return "larger microbatch per chip; fuse elementwise into GEMMs"
+    return "raise arithmetic intensity: bigger per-chip tiles / batch"
+
+
+def main() -> None:
+    path = sys.argv[1] if len(sys.argv) > 1 else \
+        "results/dryrun_single_pod.json"
+    rs = json.load(open(path))
+    print("| arch | shape | compute_s | memory_s | collective_s | dominant"
+          " | MODEL_FLOPS/chip | useful | peak GB | next lever |")
+    print("|---|---|---|---|---|---|---|---|---|---|")
+    for r in rs:
+        if not r.get("ok"):
+            print(f"| {r['arch']} | {r['shape']} | FAIL {r.get('error','')[:40]} |")
+            continue
+        t = r["roofline"]
+        print(f"| {r['arch']} | {r['shape']} | {t['compute_s']:.2e} | "
+              f"{t['memory_s']:.2e} | {t['collective_s']:.2e} | "
+              f"**{t['dominant']}** | {r['model_flops_per_chip']:.2e} | "
+              f"{min(r['useful_flop_ratio'], 9.99)*100:.0f}% | "
+              f"{r.get('peak_bytes', 0)/2**30:.1f} | "
+              f"{bottleneck_fix(r)} |")
+
+
+if __name__ == "__main__":
+    main()

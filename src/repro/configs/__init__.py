@@ -1,0 +1,54 @@
+"""Config registry: ``get_config("<arch-id>")`` / ``--arch <id>``."""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Dict
+
+from repro.configs.base import (
+    INPUT_SHAPES,
+    InputShape,
+    ModelConfig,
+    reduced,
+)
+
+# arch-id → module (one file per assigned architecture)
+_ASSIGNED = {
+    "mamba2-2.7b": "repro.configs.mamba2_2_7b",
+    "qwen1.5-110b": "repro.configs.qwen1_5_110b",
+    "paligemma-3b": "repro.configs.paligemma_3b",
+    "seamless-m4t-medium": "repro.configs.seamless_m4t_medium",
+    "kimi-k2-1t-a32b": "repro.configs.kimi_k2_1t_a32b",
+    "deepseek-7b": "repro.configs.deepseek_7b",
+    "mistral-nemo-12b": "repro.configs.mistral_nemo_12b",
+    "phi3.5-moe-42b-a6.6b": "repro.configs.phi3_5_moe_42b",
+    "deepseek-67b": "repro.configs.deepseek_67b",
+    "recurrentgemma-2b": "repro.configs.recurrentgemma_2b",
+}
+
+ASSIGNED_ARCHS = tuple(_ASSIGNED)
+
+
+def get_config(name: str, **overrides) -> ModelConfig:
+    """Look up an architecture config by id (assigned or paper model)."""
+    if name in _ASSIGNED:
+        cfg = importlib.import_module(_ASSIGNED[name]).CONFIG
+    else:
+        from repro.configs.paper_models import PAPER_MODELS
+        if name not in PAPER_MODELS:
+            raise KeyError(
+                f"unknown arch {name!r}; known: {sorted(_ASSIGNED) + sorted(PAPER_MODELS)}")
+        cfg = PAPER_MODELS[name]
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    return cfg
+
+
+def all_configs() -> Dict[str, ModelConfig]:
+    return {name: get_config(name) for name in _ASSIGNED}
+
+
+__all__ = [
+    "ModelConfig", "InputShape", "INPUT_SHAPES", "reduced",
+    "get_config", "all_configs", "ASSIGNED_ARCHS",
+]

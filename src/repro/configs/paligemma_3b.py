@@ -1,0 +1,25 @@
+"""paligemma-3b — VLM: SigLIP vision stub + Gemma decoder [arXiv:2407.07726].
+
+Language backbone: 18 layers, d_model=2048, 8 heads (MQA kv=1, head_dim
+256 per the Gemma card), d_ff=16384, vocab=257216. The SigLIP encoder +
+projector is a STUB: ``input_specs`` supplies 256 precomputed patch
+embeddings of shape (batch, 256, d_model) prepended to the text tokens.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="paligemma-3b",
+    arch_type="vlm",
+    source="[arXiv:2407.07726]",
+    num_layers=18,
+    d_model=2048,
+    num_heads=8,
+    num_kv_heads=1,
+    head_dim=256,
+    d_ff=16384,
+    vocab_size=257216,
+    activation="gelu",
+    tie_embeddings=True,
+    num_prefix_embeddings=256,
+    max_seq_len=8192,
+)

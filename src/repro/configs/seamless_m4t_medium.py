@@ -1,0 +1,27 @@
+"""seamless-m4t-medium — audio encoder-decoder [arXiv:2308.11596].
+
+Transformer backbone only: 12 encoder + 12 decoder layers, d_model=1024,
+16 heads (MHA kv=16), d_ff=4096, vocab=256206. The mel-spectrogram +
+conv feature extractor frontend is a STUB — ``input_specs`` provides
+precomputed frame embeddings (batch, frames, d_model) for the encoder.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="seamless-m4t-medium",
+    arch_type="audio",
+    source="[arXiv:2308.11596]",
+    num_layers=12,
+    d_model=1024,
+    num_heads=16,
+    num_kv_heads=16,
+    head_dim=64,
+    d_ff=4096,
+    vocab_size=256206,
+    activation="gelu",
+    glu=False,
+    is_encoder_decoder=True,
+    num_encoder_layers=12,
+    encoder_seq_len=4096,
+    max_seq_len=8192,
+)

@@ -1,0 +1,32 @@
+"""repro.core — the paper's contribution layer.
+
+- graph: ggml-style compute-graph IR with FLOP/byte accounting
+- scheduler: topological graph-level parallelism (paper §7, V0-V3)
+- cost_model: A17 Pro + TPU v5e hardware models, roofline terms
+- profiler: op-class time attribution (paper §6, Figs 5/6)
+- dispatch: hardware-aware execution planner (paper §7.5)
+- precision: F16/Q8_0/Q4_0 format descriptors
+"""
+from repro.core.graph import Graph, Node, Op, build_decoder_graph
+from repro.core.scheduler import (
+    find_concurrent_gemms, fusion_plan, simulate_version,
+    backend_throughput,
+)
+from repro.core.cost_model import (
+    HardwareSpec, TPU_V5E, A17_GPU, a17_cpu, roofline, RooflineTerms,
+    model_flops,
+)
+from repro.core.profiler import profile_graph, profile_phases
+from repro.core.dispatch import plan, ExecutionPlan
+from repro.core.precision import get_format, PrecisionFormat
+
+__all__ = [
+    "Graph", "Node", "Op", "build_decoder_graph",
+    "find_concurrent_gemms", "fusion_plan", "simulate_version",
+    "backend_throughput",
+    "HardwareSpec", "TPU_V5E", "A17_GPU", "a17_cpu", "roofline",
+    "RooflineTerms", "model_flops",
+    "profile_graph", "profile_phases",
+    "plan", "ExecutionPlan",
+    "get_format", "PrecisionFormat",
+]

@@ -1,0 +1,116 @@
+"""Hardware-aware execution planner (paper §6.1/§7.5, made first-class).
+
+The paper's closing recommendation is a "hardware-aware execution
+strategy that effectively balances computation across available
+resources". This module implements it as a *planner*: given a model
+config, a target input shape and a hardware spec, choose
+
+- weight precision per GEMM class (memory-bound GEMVs want Q4/Q8;
+  compute-bound prefill GEMMs can stay bf16),
+- fusion (always on when any GEMM class is dispatch/latency-bound),
+- Pallas-vs-XLA kernel path per GEMM,
+- the scheduler version / sharding ruleset.
+
+Decisions are napkin-math driven off arithmetic intensity vs. the
+hardware ridge point — the same logic as the paper's CPU-vs-GPU
+reasoning (small GEMVs don't amortize launch overhead; on TPU, low-AI
+GEMMs don't amortize HBM reads unless weights are quantized).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+from repro.configs.base import ModelConfig, InputShape
+from repro.core import cost_model as cm
+from repro.core.graph import Graph, Node, Op, build_decoder_graph
+from repro.core.precision import get_format
+
+
+@dataclasses.dataclass
+class GemmDecision:
+    tag: str
+    m: float                  # tokens per step
+    arithmetic_intensity: float
+    bound: str                # "memory" | "compute"
+    precision: str            # bf16 | q8_0 | q4_0
+    use_pallas: bool
+    reason: str
+
+
+@dataclasses.dataclass
+class ExecutionPlan:
+    arch: str
+    shape: str
+    hardware: str
+    scheduler_version: str
+    fuse_qkv: bool
+    fuse_gate_up: bool
+    decisions: List[GemmDecision]
+
+    def config_overrides(self) -> Dict:
+        """Overrides to apply to the ModelConfig for this plan."""
+        # one precision for all weight GEMMs: the coarsest that any
+        # memory-bound GEMM requested (keeps a single param pytree)
+        precisions = [d.precision for d in self.decisions]
+        policy = "q4_0" if "q4_0" in precisions else (
+            "q8_0" if "q8_0" in precisions else "bf16")
+        return dict(
+            scheduler_version=self.scheduler_version,
+            fuse_qkv=self.fuse_qkv,
+            fuse_gate_up=self.fuse_gate_up,
+            quant_policy=policy,
+            use_pallas=any(d.use_pallas for d in self.decisions),
+        )
+
+    def summary(self) -> str:
+        lines = [f"plan[{self.arch} x {self.shape} on {self.hardware}] "
+                 f"sched={self.scheduler_version} fuse_qkv={self.fuse_qkv} "
+                 f"fuse_gate_up={self.fuse_gate_up}"]
+        for d in self.decisions:
+            lines.append(
+                f"  {d.tag:<10} AI={d.arithmetic_intensity:9.1f} "
+                f"{d.bound:<7} -> {d.precision:<5} "
+                f"pallas={d.use_pallas} ({d.reason})")
+        return "\n".join(lines)
+
+
+def plan(cfg: ModelConfig, shape: InputShape,
+         hw: cm.HardwareSpec = cm.TPU_V5E, *,
+         allow_quant: bool = True,
+         quality_floor_bits: float = 4.5) -> ExecutionPlan:
+    """Derive the execution plan for (arch, input shape, hardware)."""
+    tokens = shape.global_batch * (1 if shape.kind == "decode"
+                                   else shape.seq_len)
+    ridge = hw.ridge_flops_per_byte
+    seq = 1 if shape.kind == "decode" else shape.seq_len
+    kv = shape.seq_len if shape.kind == "decode" else 0
+    g = build_decoder_graph(cfg, seq=seq, kv_len=kv,
+                            batch=shape.global_batch, fused=True)
+    decisions: List[GemmDecision] = []
+    for tag, nodes in sorted(g.matmuls_by_tag().items()):
+        n = nodes[0]
+        if not n.weight_bytes:   # activation-activation matmul (attention)
+            continue
+        ai = n.flops / n.bytes
+        bound = "memory" if ai < ridge else "compute"
+        if bound == "memory" and allow_quant:
+            # memory-bound: cut weight bytes as low as quality allows
+            precision = "q4_0" if quality_floor_bits <= 4.5 else "q8_0"
+            use_pallas = True    # dequant must happen in-kernel (VMEM)
+            reason = f"AI {ai:.0f} < ridge {ridge:.0f}: weight-bound GEMV"
+        else:
+            precision = "bf16"
+            use_pallas = False   # XLA's MXU path is optimal for big GEMMs
+            reason = f"AI {ai:.0f} >= ridge {ridge:.0f}: MXU-bound"
+        decisions.append(GemmDecision(
+            tag=tag, m=tokens, arithmetic_intensity=ai, bound=bound,
+            precision=precision, use_pallas=use_pallas, reason=reason))
+
+    # Fusion: always beneficial on TPU (fewer kernels, bigger GEMMs);
+    # on mobile it is the paper's V1. Disabled only for v0 studies.
+    version = "v2" if hw.link_bw or hw.name.startswith("tpu") else "v2"
+    return ExecutionPlan(
+        arch=cfg.name, shape=shape.name, hardware=hw.name,
+        scheduler_version=version, fuse_qkv=True,
+        fuse_gate_up=cfg.glu, decisions=decisions)

@@ -1,0 +1,292 @@
+"""Compute-graph IR — the llama.cpp/ggml graph analogue (paper §3).
+
+The paper analyzes llama.cpp's ``ggml_cgraph``: nodes are primitive ops
+(MUL_MAT, ADD, RMS_NORM, ROPE, SOFT_MAX, ...) executed in a serial
+schedule. We rebuild that graph symbolically, with per-node FLOP and
+byte counts, so the scheduler (§7 topological parallelism), the
+profiler (§6 op breakdown) and the cost model (Fig 4 throughput) can
+all reason about it without running anything.
+
+``build_decoder_graph`` follows the paper's Algorithm 1 (build_llama):
+per layer — norm → {Q,K,V} matmuls → rope → attention → out-proj →
+residual add → ffn-norm → {gate,up} matmuls → glu-mul → down matmul →
+residual add; then final norm + lm_head.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+import math
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+from repro.configs.base import ModelConfig
+from repro.core.precision import PrecisionFormat, get_format
+
+
+class Op(enum.Enum):
+    # names mirror GGML op names used in the paper's Fig. 5
+    MUL_MAT = "MUL_MAT"
+    ADD = "ADD"
+    MUL = "MUL"            # elementwise (GLU gating, scaling)
+    RMS_NORM = "RMS_NORM"
+    ROPE = "ROPE"
+    SOFT_MAX = "SOFT_MAX"
+    GET_ROWS = "GET_ROWS"  # embedding lookup
+    UNARY = "UNARY"        # silu / gelu
+    CPY = "CPY"            # kv-cache write / layout change
+    SCAN = "SCAN"          # ssm / lru recurrence (non-ggml extension)
+    TOPK = "TOPK"          # router (non-ggml extension)
+
+
+@dataclasses.dataclass
+class Node:
+    name: str
+    op: Op
+    flops: float
+    # bytes read/written, split so quantization applies to weights only
+    weight_bytes: float
+    act_bytes: float
+    deps: Tuple[int, ...] = ()
+    # tag: which block this node belongs to ("attn", "ffn", "other") and
+    # which named matmul it is (paper Fig 6: Qcur, Kcur, Vcur, kqv_out,
+    # ffn_up, ffn_gate, ffn_down)
+    block: str = "other"
+    tag: str = ""
+    layer: int = -1
+
+    @property
+    def bytes(self) -> float:
+        return self.weight_bytes + self.act_bytes
+
+
+@dataclasses.dataclass
+class Graph:
+    name: str
+    nodes: List[Node]
+
+    def __iter__(self):
+        return iter(self.nodes)
+
+    def __len__(self):
+        return len(self.nodes)
+
+    @property
+    def total_flops(self) -> float:
+        return sum(n.flops for n in self.nodes)
+
+    @property
+    def total_bytes(self) -> float:
+        return sum(n.bytes for n in self.nodes)
+
+    def by_op(self) -> Dict[str, List[Node]]:
+        out: Dict[str, List[Node]] = {}
+        for n in self.nodes:
+            out.setdefault(n.op.value, []).append(n)
+        return out
+
+    def matmuls_by_tag(self) -> Dict[str, List[Node]]:
+        out: Dict[str, List[Node]] = {}
+        for n in self.nodes:
+            if n.op is Op.MUL_MAT and n.tag:
+                out.setdefault(n.tag, []).append(n)
+        return out
+
+    # ---- topological wave schedule (paper §7.1) -----------------------
+    def waves(self) -> List[List[int]]:
+        """Group node indices into dependency levels.
+
+        Nodes in the same wave have no mutual dependencies and may be
+        dispatched concurrently — the paper's graph-level parallelism.
+        """
+        level: List[int] = [0] * len(self.nodes)
+        for i, n in enumerate(self.nodes):
+            level[i] = 1 + max((level[d] for d in n.deps), default=-1)
+        waves: Dict[int, List[int]] = {}
+        for i, lv in enumerate(level):
+            waves.setdefault(lv, []).append(i)
+        return [waves[k] for k in sorted(waves)]
+
+
+def _mm(name: str, m: int, k: int, n: int, fmt: PrecisionFormat,
+        act_bytes_in: float, deps, block: str, tag: str, layer: int,
+        act_elt_bytes: int = 2) -> Node:
+    """Matmul node: (m,k) @ (k,n); weights are the (k,n) operand."""
+    flops = 2.0 * m * k * n + fmt.dequant_flops_per_weight * k * n
+    weight_bytes = k * n * fmt.bytes_per_weight
+    act_bytes = (m * k + m * n) * act_elt_bytes
+    return Node(name, Op.MUL_MAT, flops, weight_bytes, act_bytes,
+                tuple(deps), block, tag, layer)
+
+
+def _ew(name: str, op: Op, elems: float, deps, block: str, layer: int,
+        reads: int = 2, writes: int = 1, flops_per_elem: float = 1.0,
+        elt_bytes: int = 2) -> Node:
+    return Node(name, op, flops_per_elem * elems,
+                0.0, (reads + writes) * elems * elt_bytes,
+                tuple(deps), block, "", layer)
+
+
+def build_decoder_graph(cfg: ModelConfig, *, seq: int, kv_len: int = 0,
+                        batch: int = 1,
+                        weight_format: Optional[str] = None,
+                        fused: Optional[bool] = None) -> Graph:
+    """Build the ggml-style compute graph for one forward pass.
+
+    ``seq`` is the number of new tokens (prefill: prompt length;
+    decode: 1). ``kv_len`` is the pre-existing KV-cache length.
+    ``fused`` overrides cfg.fuse_qkv/fuse_gate_up (used by the
+    scheduler-version benchmarks: V0 unfused vs V1+ fused).
+    """
+    fmt = get_format(weight_format or
+                     ("f16" if cfg.quant_policy == "bf16" else cfg.quant_policy))
+    act_fmt = get_format("f16")
+    fuse_qkv = cfg.fuse_qkv if fused is None else fused
+    fuse_gu = (cfg.fuse_gate_up if fused is None else fused) and cfg.glu
+
+    D = cfg.d_model
+    T = seq * batch           # new tokens
+    total_kv = kv_len + seq
+    nodes: List[Node] = []
+
+    def add(node: Node) -> int:
+        nodes.append(node)
+        return len(nodes) - 1
+
+    inp = add(Node("inp_embd", Op.GET_ROWS, T * D,
+                   T * D * fmt.bytes_per_weight, T * D * 2, (), "other",
+                   "", -1))
+
+    pattern = cfg.layer_pattern()
+    for li, kind in enumerate(pattern):
+        if kind == "ssm":
+            inp = _ssm_layer(cfg, nodes, add, inp, li, T, fmt)
+            continue
+        if kind == "rglru":
+            inp = _rglru_layer(cfg, nodes, add, inp, li, T, fmt)
+            continue
+        # ---- attention block (Algorithm 1 lines 4-8) ------------------
+        norm = add(_ew(f"l{li}.attn_norm", Op.RMS_NORM, T * D, (inp,),
+                       "attn", li, reads=1, flops_per_elem=4))
+        qd, kvd = cfg.q_dim, cfg.kv_dim
+        if fuse_qkv:
+            qkv = add(_mm(f"l{li}.wqkv", T, D, qd + 2 * kvd, fmt,
+                          0, (norm,), "attn", "Qcur", li))
+            q = k = v = qkv
+        else:
+            q = add(_mm(f"l{li}.Qcur", T, D, qd, fmt, 0, (norm,),
+                        "attn", "Qcur", li))
+            k = add(_mm(f"l{li}.Kcur", T, D, kvd, fmt, 0, (norm,),
+                        "attn", "Kcur", li))
+            v = add(_mm(f"l{li}.Vcur", T, D, kvd, fmt, 0, (norm,),
+                        "attn", "Vcur", li))
+        rope = add(_ew(f"l{li}.rope", Op.ROPE, T * (qd + kvd), (q, k),
+                       "attn", li, flops_per_elem=6))
+        kvcpy = add(_ew(f"l{li}.kv_store", Op.CPY, T * 2 * kvd, (rope, v),
+                        "attn", li, reads=1))
+        # attention scores + weighted sum; window caps effective kv
+        window = cfg.sliding_window or (cfg.local_attn_window
+                                        if cfg.arch_type == "hybrid" else 0)
+        eff_kv = min(total_kv, window) if window else total_kv
+        # scores: (heads, T, hd) @ (heads, hd, kv) — activation matmul
+        h, hd = cfg.num_heads, cfg.head_dim
+        att_flops = 2.0 * batch * h * seq * eff_kv * hd * 2  # qk + av
+        att_bytes = batch * (2 * cfg.num_kv_heads * eff_kv * hd  # K,V read
+                             + h * seq * eff_kv                  # scores
+                             + 2 * h * seq * hd) * 2
+        score = add(Node(f"l{li}.kq", Op.MUL_MAT, att_flops / 2, 0,
+                         att_bytes / 2, (rope, kvcpy), "attn", "kq", li))
+        smax = add(_ew(f"l{li}.soft_max", Op.SOFT_MAX,
+                       batch * h * seq * eff_kv, (score,), "attn", li,
+                       reads=1, flops_per_elem=5))
+        kqv = add(Node(f"l{li}.kqv", Op.MUL_MAT, att_flops / 2, 0,
+                       att_bytes / 2, (smax, kvcpy), "attn", "kqv", li))
+        attn_out = add(_mm(f"l{li}.kqv_out", T, qd, D, fmt, 0, (kqv,),
+                           "attn", "kqv_out", li))
+        ffn_inp = add(_ew(f"l{li}.ffn_inp", Op.ADD, T * D,
+                          (attn_out, inp), "attn", li))
+        # ---- FFN block (Algorithm 1 lines 9-11) -----------------------
+        inp = _ffn_block(cfg, nodes, add, ffn_inp, li, T, fmt, fuse_gu)
+
+    fn = add(_ew("final_norm", Op.RMS_NORM, T * D, (inp,), "other", -1,
+                 reads=1, flops_per_elem=4))
+    add(_mm("lm_head", T, D, cfg.vocab_size, fmt, 0, (fn,), "other",
+            "lm_head", -1))
+    return Graph(f"{cfg.name}@{fmt.name}", nodes)
+
+
+def _ffn_block(cfg, nodes, add, ffn_inp, li, T, fmt, fuse_gu) -> int:
+    D, F = cfg.d_model, cfg.d_ff
+    norm = add(_ew(f"l{li}.ffn_norm", Op.RMS_NORM, T * D, (ffn_inp,),
+                   "ffn", li, reads=1, flops_per_elem=4))
+    if cfg.is_moe:
+        # router + top-k dispatch; experts_per_token experts per token
+        rt = add(_mm(f"l{li}.router", T, D, cfg.num_experts, fmt, 0,
+                     (norm,), "ffn", "router", li))
+        tk = add(_ew(f"l{li}.topk", Op.TOPK, T * cfg.num_experts, (rt,),
+                     "ffn", li, reads=1))
+        k = cfg.experts_per_token + cfg.num_shared_experts
+        Teff = T * k
+        deps = (tk,)
+    else:
+        Teff = T
+        deps = (norm,)
+    if cfg.glu:
+        if fuse_gu:
+            gu = add(_mm(f"l{li}.ffn_gate_up", Teff, D, 2 * F, fmt, 0,
+                         deps, "ffn", "ffn_up", li))
+            pre = [gu]
+        else:
+            g = add(_mm(f"l{li}.ffn_gate", Teff, D, F, fmt, 0, deps,
+                        "ffn", "ffn_gate", li))
+            u = add(_mm(f"l{li}.ffn_up", Teff, D, F, fmt, 0, deps,
+                        "ffn", "ffn_up", li))
+            pre = [g, u]
+        act = add(_ew(f"l{li}.glu", Op.MUL, Teff * F, tuple(pre), "ffn",
+                      li, flops_per_elem=5))
+    else:
+        u = add(_mm(f"l{li}.ffn_up", Teff, D, F, fmt, 0, deps, "ffn",
+                    "ffn_up", li))
+        act = add(_ew(f"l{li}.act", Op.UNARY, Teff * F, (u,), "ffn", li,
+                      reads=1, flops_per_elem=4))
+    down = add(_mm(f"l{li}.ffn_down", Teff, F, D, fmt, 0, (act,), "ffn",
+                   "ffn_down", li))
+    return add(_ew(f"l{li}.l_out", Op.ADD, T * D, (down, ffn_inp), "ffn",
+                   li))
+
+
+def _ssm_layer(cfg, nodes, add, inp, li, T, fmt) -> int:
+    """Mamba-2 SSD layer: in_proj → conv/scan → out_proj."""
+    D, di, N = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    nh = cfg.ssm_heads
+    norm = add(_ew(f"l{li}.norm", Op.RMS_NORM, T * D, (inp,), "attn", li,
+                   reads=1, flops_per_elem=4))
+    proj_out = 2 * di + 2 * N + nh
+    zxbcdt = add(_mm(f"l{li}.in_proj", T, D, proj_out, fmt, 0, (norm,),
+                     "attn", "Qcur", li))
+    # chunked SSD scan: intra-chunk quadratic + state update
+    C = cfg.ssm_chunk
+    nchunks = max(1, T // C)
+    scan_flops = (2 * T * C * nh * cfg.ssm_head_dim        # intra-chunk
+                  + 4 * T * N * di)                        # state in/out
+    scan = add(Node(f"l{li}.ssd_scan", Op.SCAN, scan_flops, 0,
+                    (T * di * 4 + nchunks * nh * cfg.ssm_head_dim * N * 2) * 2,
+                    (zxbcdt,), "attn", "", li))
+    out = add(_mm(f"l{li}.out_proj", T, di, D, fmt, 0, (scan,), "ffn",
+                  "ffn_down", li))
+    return add(_ew(f"l{li}.l_out", Op.ADD, T * D, (out, inp), "ffn", li))
+
+
+def _rglru_layer(cfg, nodes, add, inp, li, T, fmt) -> int:
+    """RecurrentGemma RG-LRU block + its FFN."""
+    D = cfg.d_model
+    w = cfg.rglru_width or D
+    norm = add(_ew(f"l{li}.norm", Op.RMS_NORM, T * D, (inp,), "attn", li,
+                   reads=1, flops_per_elem=4))
+    gates = add(_mm(f"l{li}.lru_in", T, D, 2 * w, fmt, 0, (norm,),
+                    "attn", "Qcur", li))
+    scan = add(Node(f"l{li}.rglru_scan", Op.SCAN, 10.0 * T * w, 0,
+                    T * w * 6, (gates,), "attn", "", li))
+    out = add(_mm(f"l{li}.lru_out", T, w, D, fmt, 0, (scan,), "attn",
+                  "kqv_out", li))
+    res = add(_ew(f"l{li}.res", Op.ADD, T * D, (out, inp), "attn", li))
+    return _ffn_block(cfg, nodes, add, res, li, T, fmt, cfg.fuse_gate_up)

@@ -1,0 +1,45 @@
+"""Precision / quantization format descriptors (paper §4.2, §5.3).
+
+Mirrors llama.cpp's formats: F16 baseline, Q8_0 and Q4_0 group-quants.
+``bits_per_weight`` includes the per-group scale overhead — Q4_0 with
+group 32 and an f16 scale is 4 + 16/32 = 4.5 bits/weight, exactly the
+paper's footnote 1 ("effective 4.5 bits/weight").
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class PrecisionFormat:
+    name: str
+    weight_bits: int          # payload bits per weight
+    group_size: int           # weights per scale group (0 → none)
+    scale_bits: int           # bits per group scale
+    dequant_flops_per_weight: float  # extra in-kernel work
+
+    @property
+    def bits_per_weight(self) -> float:
+        if not self.group_size:
+            return float(self.weight_bits)
+        return self.weight_bits + self.scale_bits / self.group_size
+
+    @property
+    def bytes_per_weight(self) -> float:
+        return self.bits_per_weight / 8.0
+
+
+F32 = PrecisionFormat("f32", 32, 0, 0, 0.0)
+F16 = PrecisionFormat("f16", 16, 0, 0, 0.0)
+BF16 = PrecisionFormat("bf16", 16, 0, 0, 0.0)
+Q8_0 = PrecisionFormat("q8_0", 8, 32, 16, 1.5)   # widen int8 + scale
+Q4_0 = PrecisionFormat("q4_0", 4, 32, 16, 4.0)   # mask/shift/sign-extend
+#   dequant cost: NEON q4 path is ~3-4 extra ops per weight (nibble
+#   mask, shift, sign-extend, scale) — this is why the CPU's Q4 win
+#   shrinks as models grow and the GPU retakes the lead at 7B (Fig 4e).
+
+FORMATS = {f.name: f for f in (F32, F16, BF16, Q8_0, Q4_0)}
+
+
+def get_format(name: str) -> PrecisionFormat:
+    return FORMATS[name]

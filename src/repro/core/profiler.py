@@ -1,0 +1,66 @@
+"""Op-level profiler — reproduces the paper's §6 breakdown (Figs 5/6).
+
+Given a compute graph and a hardware spec, attribute predicted time to
+GGML op classes and to the seven named matmuls per decoder layer
+(Qcur, Kcur, Vcur, kqv_out, ffn_gate, ffn_up, ffn_down).
+
+The paper measured, for llama3.2-1B@F16 on the A17 CPU:
+  MUL_MAT share = 87.6% (prefill) / 76.2% (decode)
+  FFN matmuls (up/down/gate) the largest single contributors.
+``tests/test_profiler.py`` asserts our model reproduces those shapes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+from repro.configs.base import ModelConfig
+from repro.core import cost_model as cm
+from repro.core.graph import Graph, Op, build_decoder_graph
+
+
+@dataclasses.dataclass
+class ProfileReport:
+    phase: str
+    total_s: float
+    by_op: Dict[str, float]         # op class → seconds
+    by_matmul_tag: Dict[str, float]  # named matmul → seconds
+
+    def op_share(self, op: str) -> float:
+        return self.by_op.get(op, 0.0) / self.total_s if self.total_s else 0.0
+
+    @property
+    def mul_mat_share(self) -> float:
+        return self.op_share("MUL_MAT")
+
+    def dominant_matmul(self) -> str:
+        return max(self.by_matmul_tag, key=self.by_matmul_tag.get)
+
+
+def profile_graph(g: Graph, hw: cm.HardwareSpec, phase: str) -> ProfileReport:
+    by_op: Dict[str, float] = {}
+    by_tag: Dict[str, float] = {}
+    total = 0.0
+    for n in g.nodes:
+        t = cm.node_cost(n, hw).total_s
+        by_op[n.op.value] = by_op.get(n.op.value, 0.0) + t
+        if n.op is Op.MUL_MAT and n.tag:
+            by_tag[n.tag] = by_tag.get(n.tag, 0.0) + t
+        total += t
+    return ProfileReport(phase, total, by_op, by_tag)
+
+
+def profile_phases(cfg: ModelConfig, *, threads: int = 2,
+                   prompt_len: int = 128, gen_kv: int = 128,
+                   weight_format: str = "f16",
+                   ) -> Dict[str, ProfileReport]:
+    """Prefill + decode profiles (the paper's Fig 5a/5b setup)."""
+    hw = cm.a17_cpu(threads)
+    prefill = build_decoder_graph(cfg, seq=prompt_len, kv_len=0,
+                                  weight_format=weight_format, fused=False)
+    decode = build_decoder_graph(cfg, seq=1, kv_len=gen_kv,
+                                 weight_format=weight_format, fused=False)
+    return {
+        "prefill": profile_graph(prefill, hw, "prefill"),
+        "decode": profile_graph(decode, hw, "decode"),
+    }

@@ -1,0 +1,149 @@
+"""Topological graph scheduler — the paper's §7 contribution.
+
+Three pieces:
+
+1. ``find_concurrent_gemms`` — analyze a :class:`Graph` for independent
+   MUL_MAT sets (the paper's Fig 7 coloring: {Q,K,V} and
+   {ffn_gate, ffn_up} share all inputs and no outputs).
+2. ``fusion_plan`` — convert those sets into *fusions* (the TPU-native
+   realization: one wide GEMM per set, see DESIGN.md §2).
+3. ``simulate_version`` — predict throughput of the paper's execution
+   versions V0–V3 on a given hardware spec, used by
+   ``benchmarks/scheduler_versions.py`` to reproduce Figs 8–10.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.configs.base import ModelConfig
+from repro.core import cost_model as cm
+from repro.core.graph import Graph, Node, Op, build_decoder_graph
+
+
+@dataclasses.dataclass(frozen=True)
+class ConcurrentSet:
+    """A set of MUL_MAT nodes with identical deps → fusable/parallel."""
+    layer: int
+    block: str
+    node_ids: Tuple[int, ...]
+    names: Tuple[str, ...]
+
+
+def find_concurrent_gemms(g: Graph) -> List[ConcurrentSet]:
+    """Group matmuls that share *all* dependencies within a layer.
+
+    This is the paper's dynamic graph analysis (§7.1 step 1): two
+    matmuls with the same dep set are independent by construction and
+    can be dispatched concurrently (mobile) or fused (TPU).
+    """
+    groups: Dict[Tuple, List[int]] = {}
+    for i, n in enumerate(g.nodes):
+        if n.op is not Op.MUL_MAT or not n.weight_bytes:
+            continue
+        key = (n.layer, n.block, n.deps)
+        groups.setdefault(key, []).append(i)
+    out = []
+    for (layer, block, _deps), ids in groups.items():
+        if len(ids) > 1:
+            out.append(ConcurrentSet(layer, block, tuple(ids),
+                                     tuple(g.nodes[i].name for i in ids)))
+    return sorted(out, key=lambda s: s.node_ids)
+
+
+@dataclasses.dataclass(frozen=True)
+class FusionPlan:
+    """Which projection fusions to apply (flows into ModelConfig flags)."""
+    fuse_qkv: bool
+    fuse_gate_up: bool
+    n_fused_sets: int
+    nodes_saved: int
+
+
+def fusion_plan(g: Graph) -> FusionPlan:
+    sets = find_concurrent_gemms(g)
+    qkv = any(s.block == "attn" and len(s.node_ids) >= 2 for s in sets)
+    gu = any(s.block == "ffn" and len(s.node_ids) >= 2 for s in sets)
+    saved = sum(len(s.node_ids) - 1 for s in sets)
+    return FusionPlan(qkv, gu, len(sets), saved)
+
+
+# ---------------------------------------------------------------------------
+# Execution-version simulator (paper §7.2, Figs 8-10)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class VersionResult:
+    version: str
+    step_s: float
+    tokens_per_s: float
+    n_nodes: int
+    detail: str
+
+
+def simulate_version(cfg: ModelConfig, version: str, *,
+                     threads: int = 4, seq: int = 1, kv_len: int = 64,
+                     weight_format: str = "f16",
+                     batch: int = 1) -> VersionResult:
+    """Predict decode throughput for paper versions V0-V3 on the A17.
+
+    - v0: serial schedule, unfused GEMMs (paper baseline, 11.5 tk/s)
+    - v1: topological wave schedule — independent GEMMs dispatched
+          concurrently (13 tk/s)
+    - v2: v1 + tensor-level parallelism inside each GEMM: the wave's
+          memory traffic now streams at full multi-core bandwidth (15)
+    - v3: v2 but FFN block offloaded to the GPU — every block boundary
+          pays a Metal sync (6 tk/s)
+    """
+    cpu = cm.a17_cpu(threads)
+    fused = version in ("v2", "v3")
+    g = build_decoder_graph(cfg, seq=seq, kv_len=kv_len, batch=batch,
+                            weight_format=weight_format, fused=fused)
+
+    # Calibration notes (EXPERIMENTS.md §Paper-repro): the §7 experiments
+    # ran on an instrumented build whose serial baseline (11.5 tk/s)
+    # sits below the untouched llama.cpp of Fig 4 (17 tk/s @2t). The
+    # version deltas — not the absolute baseline — are the paper's
+    # claim, and they fall out of (a) strided-vs-sequential streaming
+    # efficiency and (b) barrier count per schedule.
+    if version == "v0":
+        # serial schedule; intra-op threading partitions each GEMM into
+        # strided slices -> poor DRAM row locality (eff 0.66/0.95)
+        hw = dataclasses.replace(cpu, mem_efficiency=0.66)
+        t = cm.graph_time_serial(g, hw)
+        detail = "serial schedule, unfused, strided intra-op threading"
+    elif version == "v1":
+        # graph-level parallelism: concurrent independent GEMMs, each
+        # single-threaded -> sequential streams but imperfect overlap
+        t = cm.graph_time_wave(g, cpu, overlap_efficiency=0.78)
+        detail = "wave schedule over independent GEMMs"
+    elif version == "v2":
+        # + tensor parallelism inside fused GEMMs: sequential streaming
+        # at aggregate bandwidth, one barrier per wave
+        t = cm.graph_time_wave(g, cpu, overlap_efficiency=0.92)
+        detail = "wave schedule + intra-GEMM tensor parallelism (fused)"
+    elif version == "v3":
+        hw = dataclasses.replace(cpu, mem_efficiency=0.92 * 0.95)
+        t = cm.graph_time_heterogeneous(g, hw, cm.A17_GPU,
+                                        boundary_tags=("ffn",))
+        detail = "CPU attention + GPU FFN, per-block Metal sync"
+    else:
+        raise ValueError(version)
+    return VersionResult(version, t, cm.tokens_per_second(t, seq * batch),
+                         len(g.nodes), detail)
+
+
+def backend_throughput(cfg: ModelConfig, backend: str, *,
+                       threads: int = 2, weight_format: str = "f16",
+                       kv_len: int = 64, seq: int = 1,
+                       batch: int = 1) -> float:
+    """Tokens/s for the paper's Fig 4 sweep (GPU vs 1-6 CPU threads)."""
+    g = build_decoder_graph(cfg, seq=seq, kv_len=kv_len, batch=batch,
+                            weight_format=weight_format, fused=False)
+    if backend == "gpu":
+        t = cm.graph_time_serial(g, cm.A17_GPU)
+    elif backend == "cpu":
+        t = cm.graph_time_wave(g, cm.a17_cpu(threads))
+    else:
+        raise ValueError(backend)
+    return cm.tokens_per_second(t, seq * batch)

@@ -1,0 +1,15 @@
+from repro.distributed.sharding import (
+    AxisRules,
+    RULES_V0,
+    RULES_V1,
+    RULES_V2,
+    RULES_V3,
+    rules_for,
+    logical_to_spec,
+    constrain,
+)
+
+__all__ = [
+    "AxisRules", "RULES_V0", "RULES_V1", "RULES_V2", "RULES_V3",
+    "rules_for", "logical_to_spec", "constrain",
+]

@@ -1,0 +1,48 @@
+"""Explicit mesh/rules context (avoids deprecated ambient-mesh APIs).
+
+Launchers do::
+
+    with use_mesh(mesh), use_rules(rules):
+        jax.jit(step, ...)
+
+Model code calls :func:`repro.distributed.sharding.constrain`, which
+reads this context; with no mesh set, constraints are no-ops so the same
+model code runs single-device in tests.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional
+
+from jax.sharding import Mesh
+
+_state = threading.local()
+
+
+def current_mesh() -> Optional[Mesh]:
+    return getattr(_state, "mesh", None)
+
+
+def current_rules():
+    return getattr(_state, "rules", None)
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Optional[Mesh]):
+    prev = current_mesh()
+    _state.mesh = mesh
+    try:
+        yield mesh
+    finally:
+        _state.mesh = prev
+
+
+@contextlib.contextmanager
+def use_rules(rules):
+    prev = current_rules()
+    _state.rules = rules
+    try:
+        yield rules
+    finally:
+        _state.rules = prev

@@ -1,0 +1,130 @@
+"""Tiled online-softmax (flash) attention, GQA + causal + sliding window.
+
+TPU adaptation notes (DESIGN.md §2): the paper identifies attention's
+``kq``/``kqv`` matmuls as part of the MUL_MAT bottleneck; FlashAttention
+is cited (§2.1) as the standard remedy. This kernel tiles Q and KV into
+VMEM blocks, keeps the running (m, l, acc) statistics in VMEM scratch
+across the KV grid dimension, and *skips* KV blocks that are fully
+masked by causality or the sliding window — the block-skip is what makes
+``long_500k`` prefill linear-in-window rather than quadratic for the
+windowed dense architectures.
+
+Grid: (B, Hq, Sq/bq, Skv/bk), KV innermost. GQA is handled in the index
+map: query head h reads KV head h // (Hq // Hkv).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BQ = 512
+DEFAULT_BK = 512
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  scale: float, causal: bool, window: int,
+                  q_offset: int, bq: int, bk: int, kv_steps: int,
+                  out_dtype):
+    i, j = pl.program_id(2), pl.program_id(3)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # block-skip: is any (qpos, kpos) pair in this tile visible?
+    q_lo = i * bq + q_offset          # absolute position of first query
+    q_hi = q_lo + bq - 1
+    k_lo = j * bk
+    k_hi = k_lo + bk - 1
+    visible = True
+    if causal:
+        visible = jnp.asarray(k_lo <= q_hi)
+    if window:
+        visible = jnp.logical_and(visible, k_hi > q_lo - window)
+
+    @pl.when(visible if (causal or window) else True)
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32) * scale        # (bq, d)
+        k = k_ref[0, 0].astype(jnp.float32)                # (bk, d)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        qpos = q_lo + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kpos = k_lo + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = jnp.ones((bq, bk), jnp.bool_)
+        if causal:
+            mask &= kpos <= qpos
+        if window:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]                                # (bq, 1)
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)
+        p = jnp.where(mask, p, 0.0)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, -1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot(
+            p.astype(v.dtype), v, preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(j == kv_steps - 1)
+    def _store():
+        l = l_ref[...]
+        l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(out_dtype)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int = 0,
+                    scale: Optional[float] = None, q_offset: int = 0,
+                    bq: int = DEFAULT_BQ, bk: int = DEFAULT_BK,
+                    interpret: bool = False) -> jax.Array:
+    """GQA flash attention.
+
+    q: (B, Hq, Sq, D); k, v: (B, Hkv, Skv, D) with Hq % Hkv == 0.
+    """
+    B, Hq, Sq, D = q.shape
+    _, Hkv, Skv, _ = k.shape
+    assert Hq % Hkv == 0
+    g = Hq // Hkv
+    scale = scale if scale is not None else D ** -0.5
+    bq = min(bq, Sq)
+    bk = min(bk, Skv)
+    assert Sq % bq == 0 and Skv % bk == 0, (Sq, Skv, bq, bk)
+    kv_steps = Skv // bk
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, window=window,
+        q_offset=q_offset, bq=bq, bk=bk, kv_steps=kv_steps,
+        out_dtype=q.dtype)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(B, Hq, Sq // bq, kv_steps),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, D), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bk, D),
+                         lambda b, h, i, j: (b, h // g, j, 0)),
+            pl.BlockSpec((1, 1, bk, D),
+                         lambda b, h, i, j: (b, h // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, D),
+                               lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),   # running max
+            pltpu.VMEM((bq, 1), jnp.float32),   # running denom
+            pltpu.VMEM((bq, D), jnp.float32),   # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,145 @@
+"""Public jit'd kernel wrappers — the dispatch point between Pallas and XLA.
+
+Models call these; the paper's hardware-aware planner (core/dispatch)
+decides per-GEMM whether the Pallas path runs. On this CPU container
+Pallas executes in interpret mode (``REPRO_PALLAS_INTERPRET=1`` default
+when no TPU is present); on a real pod the same call sites compile to
+Mosaic.
+"""
+from __future__ import annotations
+
+import functools
+import os
+from typing import Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.quant.quantize import QuantizedTensor, dequantize
+from repro.kernels import quant_matmul as _qmm
+from repro.kernels import flash_attention as _fa
+from repro.kernels import decode_attention as _da
+
+
+def _interpret_default() -> bool:
+    env = os.environ.get("REPRO_PALLAS_INTERPRET")
+    if env is not None:
+        return env not in ("0", "false", "")
+    return jax.default_backend() != "tpu"
+
+
+def matmul(x: jax.Array, w: Union[jax.Array, QuantizedTensor], *,
+           use_pallas: bool = False,
+           out_dtype=None) -> jax.Array:
+    """x @ w for plain or quantized weights.
+
+    x may have leading batch dims; they are flattened into M. Without
+    ``use_pallas``, quantized weights dequantize via XLA (still saves
+    HBM for storage; in-kernel dequant needs the Pallas path).
+    """
+    out_dtype = out_dtype or x.dtype
+    lead = x.shape[:-1]
+    K = x.shape[-1]
+    if isinstance(w, QuantizedTensor):
+        N = w.logical_shape[-1]
+        if use_pallas:
+            x2 = x.reshape(-1, K)
+            M = x2.shape[0]
+            # tile sizes must divide; fall back to XLA when misaligned
+            bm = _pick_tile(M, _qmm.DEFAULT_BM)
+            bn = _pick_tile(N, _qmm.DEFAULT_BN)
+            bk = _pick_tile(K, _qmm.DEFAULT_BK, multiple=w.group)
+            if bm and bn and bk:
+                out = _qmm.quant_matmul(
+                    x2, w, bm=bm, bn=bn, bk=bk, out_dtype=out_dtype,
+                    interpret=_interpret_default())
+                return out.reshape(*lead, N)
+        wd = dequantize(w, out_dtype)
+        return jnp.dot(x, wd, preferred_element_type=jnp.float32
+                       ).astype(out_dtype)
+    return jnp.dot(x, w.astype(x.dtype),
+                   preferred_element_type=jnp.float32).astype(out_dtype)
+
+
+def _pick_tile(dim: int, preferred: int, multiple: int = 1) -> Optional[int]:
+    """Largest tile <= preferred that divides dim (and is a multiple)."""
+    t = min(preferred, dim)
+    while t >= multiple:
+        if dim % t == 0 and t % multiple == 0:
+            return t
+        t -= multiple
+    return None
+
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+              causal: bool = True, window: int = 0,
+              q_offset: int = 0, use_pallas: bool = False,
+              scale: Optional[float] = None) -> jax.Array:
+    """Prefill/training attention; (B, H, S, D) layout."""
+    if use_pallas:
+        Sq, Skv = q.shape[2], k.shape[2]
+        bq = _pick_tile(Sq, _fa.DEFAULT_BQ)
+        bk = _pick_tile(Skv, _fa.DEFAULT_BK)
+        if bq and bk:
+            return _fa.flash_attention(
+                q, k, v, causal=causal, window=window, scale=scale,
+                q_offset=q_offset, bq=bq, bk=bk,
+                interpret=_interpret_default())
+    from repro.kernels import ref
+    return ref.attention_ref(q, k, v, causal=causal, window=window,
+                             scale=scale, q_offset=q_offset)
+
+
+def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array, kv_len, *,
+                     window: int = 0, use_pallas: bool = False,
+                     scale: Optional[float] = None) -> jax.Array:
+    """Single-token attention; q (B, H, D), cache (B, Hkv, S, D)."""
+    if use_pallas:
+        S = k.shape[2]
+        bk = _pick_tile(S, _da.DEFAULT_BK)
+        if bk:
+            return _da.decode_attention(
+                q, k, v, kv_len, window=window, scale=scale, bk=bk,
+                interpret=_interpret_default())
+    return _decode_attention_jnp(q, k, v, kv_len, window=window,
+                                 scale=scale)
+
+
+def _decode_attention_jnp(q, k, v, kv_len, *, window: int = 0,
+                          scale: Optional[float] = None) -> jax.Array:
+    """bf16-preserving decode attention (the XLA production path).
+
+    Deliberately avoids ``k.astype(f32)`` / ``v.astype(f32)``: inside a
+    scan-over-layers, XLA hoists such elementwise converts out of the
+    loop, materializing an f32 copy of the *entire stacked KV cache*
+    (2x the cache in HBM). Mixed-precision matmuls with
+    ``preferred_element_type=f32`` keep the cache read at bf16 width.
+    """
+    B, Hq, D = q.shape
+    _, Hkv, S, _ = k.shape
+    G = Hq // Hkv
+    scale = scale if scale is not None else D ** -0.5
+    kv_len = jnp.asarray(kv_len)
+    if kv_len.ndim == 0:
+        kv_len = jnp.full((B,), kv_len)
+    # Barrier: stops XLA-CPU's bf16→f32 dot legalization converts from
+    # being loop-hoisted over the whole stacked cache (2x HBM). No-op
+    # on TPU where bf16 dots are native.
+    k, v = jax.lax.optimization_barrier((k, v))
+    qg = (q.astype(jnp.float32) * scale).astype(q.dtype)
+    qg = qg.reshape(B, Hkv, G, D)
+    s = jnp.einsum("bhgd,bhkd->bhgk", qg, k,
+                   preferred_element_type=jnp.float32)    # (B,Hkv,G,S)
+    kpos = jnp.arange(S)[None, :]
+    mask = kpos < kv_len[:, None]
+    if window:
+        mask &= kpos >= kv_len[:, None] - window
+    s = jnp.where(mask[:, None, None], s, -1e30)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    p = jnp.where(mask[:, None, None], p, 0.0)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum("bhgk,bhkd->bhgd", p.astype(q.dtype), v,
+                     preferred_element_type=jnp.float32)
+    out = out / jnp.maximum(l, 1e-20)
+    return out.reshape(B, Hq, D).astype(q.dtype)

@@ -1,0 +1,140 @@
+"""Pure-jnp oracles for every Pallas kernel (allclose targets).
+
+Each function is the mathematically-obvious implementation with no
+tiling, used by tests/test_kernels.py to validate the Pallas kernels in
+interpret mode across shape/dtype sweeps.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.quant.quantize import QuantizedTensor, dequantize
+
+
+def quant_matmul_ref(x: jax.Array, w: QuantizedTensor,
+                     out_dtype=jnp.bfloat16) -> jax.Array:
+    """x @ dequant(w): x (M, K) activation, w logical (K, N)."""
+    wd = dequantize(w, jnp.float32)
+    return jnp.dot(x.astype(jnp.float32), wd,
+                   preferred_element_type=jnp.float32).astype(out_dtype)
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True, window: int = 0,
+                  scale: Optional[float] = None,
+                  q_offset: int = 0) -> jax.Array:
+    """GQA attention oracle.
+
+    q: (B, Hq, Sq, D); k, v: (B, Hkv, Skv, D). Hq % Hkv == 0.
+    ``q_offset``: absolute position of q[0] (for decode: kv_len - Sq).
+    ``window`` > 0: sliding window — key j visible to query i iff
+    i - window < j <= i (positions absolute).
+    """
+    B, Hq, Sq, D = q.shape
+    _, Hkv, Skv, _ = k.shape
+    g = Hq // Hkv
+    scale = scale if scale is not None else D ** -0.5
+    qf = q.astype(jnp.float32) * scale
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    # expand kv heads to q heads
+    kf = jnp.repeat(kf, g, axis=1)
+    vf = jnp.repeat(vf, g, axis=1)
+    scores = jnp.einsum("bhqd,bhkd->bhqk", qf, kf)
+    qpos = jnp.arange(Sq)[:, None] + q_offset
+    kpos = jnp.arange(Skv)[None, :]
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window:
+        mask &= kpos > qpos - window
+    scores = jnp.where(mask[None, None], scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    # rows with no visible keys (possible with tiny windows) -> 0
+    probs = jnp.where(jnp.any(mask, -1)[None, None, :, None], probs, 0.0)
+    out = jnp.einsum("bhqk,bhkd->bhqd", probs, vf)
+    return out.astype(q.dtype)
+
+
+def decode_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                         kv_len: jax.Array | int,
+                         window: int = 0) -> jax.Array:
+    """Single-token GQA attention over a (possibly part-filled) cache.
+
+    q: (B, Hq, D); k, v: (B, Hkv, S, D); kv_len: int or (B,) — number of
+    valid cache entries per sequence (the new token's position is
+    kv_len - 1, i.e. the cache already contains it).
+    """
+    B, Hq, D = q.shape
+    _, Hkv, S, _ = k.shape
+    kv_len = jnp.asarray(kv_len)
+    if kv_len.ndim == 0:
+        kv_len = jnp.full((B,), kv_len)
+    # key j valid iff j < kv_len and (no window or j >= kv_len - window)
+    kpos = jnp.arange(S)[None, :]
+    mask = kpos < kv_len[:, None]
+    if window:
+        mask &= kpos >= (kv_len[:, None] - window)
+    g = Hq // Hkv
+    kf = jnp.repeat(k.astype(jnp.float32), g, axis=1)
+    vf = jnp.repeat(v.astype(jnp.float32), g, axis=1)
+    scores = jnp.einsum("bhd,bhkd->bhk", q.astype(jnp.float32) * D**-0.5, kf)
+    scores = jnp.where(mask[:, None], scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhk,bhkd->bhd", probs, vf).astype(q.dtype)
+
+
+def ssd_scan_ref(x: jax.Array, dt: jax.Array, A: jax.Array,
+                 B: jax.Array, C: jax.Array,
+                 init_state: Optional[jax.Array] = None):
+    """Mamba-2 SSD oracle: naive sequential recurrence.
+
+    x:  (b, s, h, p)   inputs per head
+    dt: (b, s, h)      positive step sizes (post-softplus)
+    A:  (h,)           negative scalars per head
+    B:  (b, s, n)      input projection (shared across heads)
+    C:  (b, s, n)      output projection
+    Returns (y (b,s,h,p), final_state (b,h,p,n)).
+
+    Recurrence per head: S_t = exp(dt_t*A) * S_{t-1} + dt_t * x_t B_t^T
+                         y_t = S_t C_t
+    """
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    xf, dtf = x.astype(jnp.float32), dt.astype(jnp.float32)
+    Bf, Cf, Af = B.astype(jnp.float32), C.astype(jnp.float32), A.astype(jnp.float32)
+    S0 = (jnp.zeros((b, h, p, n), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+
+    def step(S, t):
+        decay = jnp.exp(dtf[:, t] * Af[None, :])          # (b, h)
+        dBx = jnp.einsum("bh,bhp,bn->bhpn", dtf[:, t], xf[:, t], Bf[:, t])
+        S = S * decay[..., None, None] + dBx
+        y = jnp.einsum("bhpn,bn->bhp", S, Cf[:, t])
+        return S, y
+
+    S, ys = jax.lax.scan(step, S0, jnp.arange(s))
+    y = jnp.moveaxis(ys, 0, 1)                            # (b, s, h, p)
+    return y.astype(x.dtype), S
+
+
+def rglru_ref(x: jax.Array, a: jax.Array, gate: jax.Array,
+              init_state: Optional[jax.Array] = None):
+    """RG-LRU oracle: h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (g_t * x_t).
+
+    x, a, gate: (b, s, w); a in (0, 1). Returns (y, final_state)."""
+    xf = (x * gate).astype(jnp.float32)
+    af = a.astype(jnp.float32)
+    scale = jnp.sqrt(jnp.clip(1.0 - af ** 2, 0.0, None))
+    h0 = (jnp.zeros(x.shape[:1] + x.shape[2:], jnp.float32)
+          if init_state is None else init_state.astype(jnp.float32))
+
+    def step(h, t):
+        h = af[:, t] * h + scale[:, t] * xf[:, t]
+        return h, h
+
+    h, ys = jax.lax.scan(step, h0, jnp.arange(x.shape[1]))
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype), h

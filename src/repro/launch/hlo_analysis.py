@@ -1,0 +1,94 @@
+"""Extract roofline inputs from a compiled executable.
+
+``cost_analysis()`` gives per-device HLO FLOPs and bytes accessed.
+Collective bytes are NOT in cost_analysis — we parse the optimized HLO
+text and sum the result-operand sizes of every collective op
+(all-gather, all-reduce, reduce-scatter, all-to-all,
+collective-permute), per the brief.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter",
+                "all-to-all", "collective-permute")
+
+# e.g.  %x = bf16[16,512,128]{2,1,0} all-gather(...)
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"=\s*((?:\([^)]*\))|(?:[a-z0-9]+\[[0-9,]*\][^ ]*))\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+)
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes(hlo_text: str) -> Tuple[float, Dict[str, float]]:
+    """Total + per-op-kind bytes moved by collectives (result sizes)."""
+    per: Dict[str, float] = {}
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        shapes_str, kind = m.group(1), m.group(2)
+        size = sum(_shape_bytes(d, dims)
+                   for d, dims in _SHAPE_RE.findall(shapes_str))
+        if size:
+            per[kind] = per.get(kind, 0.0) + size
+    return sum(per.values()), per
+
+
+def collective_counts(hlo_text: str) -> Dict[str, int]:
+    counts: Dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if m:
+            counts[m.group(2)] = counts.get(m.group(2), 0) + 1
+    return counts
+
+
+def analyze_compiled(compiled) -> Dict[str, float]:
+    """Pull flops / bytes / collective bytes / memory from a compiled
+    executable."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):   # older jax returns [dict]
+        cost = cost[0]
+    flops = float(cost.get("flops", 0.0))
+    bytes_accessed = float(cost.get("bytes accessed", 0.0))
+    try:
+        text = compiled.as_text()
+    except Exception:
+        text = ""
+    coll, per = collective_bytes(text)
+    mem = {}
+    try:
+        ma = compiled.memory_analysis()
+        mem = {
+            "argument_bytes": float(ma.argument_size_in_bytes),
+            "output_bytes": float(ma.output_size_in_bytes),
+            "temp_bytes": float(ma.temp_size_in_bytes),
+            "peak_bytes": float(ma.temp_size_in_bytes
+                                + ma.argument_size_in_bytes),
+        }
+    except Exception:
+        pass
+    return {
+        "hlo_flops": flops,
+        "hlo_bytes": bytes_accessed,
+        "collective_bytes": coll,
+        "collectives_by_kind": per,
+        **mem,
+    }

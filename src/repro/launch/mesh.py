@@ -1,0 +1,26 @@
+"""Production mesh construction (deliverable e, step 1).
+
+A function — not a module-level constant — so importing this module
+never touches jax device state. The dry-run launcher sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` *before* any
+jax import; smoke tests and benches see the real single device.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+from jax.sharding import AxisType, Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh() -> Mesh:
+    """1x1 mesh on the real local device (smoke tests, examples)."""
+    return jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(AxisType.Auto, AxisType.Auto))

@@ -1,0 +1,66 @@
+"""Serving launcher: bring up the continuous-batching engine on a
+reduced (or full, on a real pod) model and run a synthetic request
+stream.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch mistral-nemo-12b \
+      --reduced --requests 8 --precision q8_0
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config, reduced
+from repro.models import Model
+from repro.quant import quantize_tree
+from repro.serving import Request, SamplingConfig, ServingEngine
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="deepseek-7b")
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--precision", default="bf16",
+                    choices=["bf16", "q8_0", "q4_0"])
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--max-len", type=int, default=256)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduced(cfg)
+    cfg = dataclasses.replace(cfg, quant_policy=args.precision)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0), quantize=False)
+    if args.precision != "bf16":
+        params = quantize_tree(params, args.precision)
+
+    engine = ServingEngine(model, params, slots=args.slots,
+                           max_len=args.max_len,
+                           sampling=SamplingConfig(temperature=0.8,
+                                                   top_k=40))
+    rng = np.random.default_rng(0)
+    reqs = [Request(uid=i,
+                    prompt=rng.integers(
+                        1, cfg.vocab_size, size=4 + i % 5).astype(np.int32),
+                    max_new_tokens=args.max_new)
+            for i in range(args.requests)]
+    for r in reqs:
+        engine.submit(r)
+    t0 = time.time()
+    engine.run()
+    dt = time.time() - t0
+    print(f"arch={cfg.name} precision={args.precision}: "
+          f"{engine.stats.tokens_generated} tokens / {dt:.1f}s = "
+          f"{engine.stats.tokens_generated / dt:.1f} tok/s "
+          f"({engine.stats.steps} steps, {engine.stats.prefills} prefills)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,94 @@
+"""Distributed training launcher.
+
+On the container this runs a reduced model on the 1x1 host mesh; on a
+real pod the same code path takes ``--mesh 16x16`` (or 2x16x16 with the
+pod axis) — the mesh and sharding rules are the only difference, which
+is the point of the logical-axis system.
+
+  PYTHONPATH=src python -m repro.launch.train --arch deepseek-7b \
+      --reduced --steps 30
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ASSIGNED_ARCHS, get_config, reduced
+from repro.distributed import context as dctx
+from repro.distributed.sharding import rules_for, tree_shardings
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.models import Model
+from repro.models.params import param_pspecs
+from repro.training import (AdamWConfig, DataConfig, TrainConfig, batches,
+                            checkpoint, init_state, make_train_step)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="deepseek-7b")
+    ap.add_argument("--reduced", action="store_true",
+                    help="reduced config (CPU-sized)")
+    ap.add_argument("--steps", type=int, default=30)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--rules", default="v2")
+    ap.add_argument("--mesh", default="host",
+                    choices=["host", "16x16", "2x16x16"])
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt", default="")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduced(cfg)
+    if args.mesh == "host":
+        mesh = make_host_mesh()
+    else:
+        mesh = make_production_mesh(multi_pod=args.mesh == "2x16x16")
+    rules = rules_for(args.rules)
+    model = Model(cfg)
+
+    with dctx.use_mesh(mesh), dctx.use_rules(rules):
+        params = model.init(jax.random.PRNGKey(0))
+        shardings = tree_shardings(
+            model.abstract_params(),
+            param_pspecs(model.param_specs(), rules, mesh), mesh)
+        params = jax.device_put(params, shardings)
+        opt = init_state(params)
+
+        tcfg = TrainConfig(
+            adamw=AdamWConfig(lr=1e-3, warmup_steps=10,
+                              total_steps=args.steps),
+            microbatches=args.microbatches)
+        step = jax.jit(make_train_step(model, tcfg),
+                       donate_argnums=(0, 1))
+        data = batches(DataConfig(vocab_size=cfg.vocab_size,
+                                  seq_len=args.seq_len,
+                                  global_batch=args.batch, kind="lm"))
+        t0 = time.time()
+        for i in range(args.steps):
+            b = next(data)
+            batch = {k: jnp.asarray(v) for k, v in b.items()}
+            if cfg.arch_type == "audio":
+                batch["frames"] = jnp.zeros(
+                    (args.batch, cfg.encoder_seq_len, cfg.d_model),
+                    jnp.bfloat16)
+            if cfg.arch_type == "vlm":
+                batch["prefix"] = jnp.zeros(
+                    (args.batch, cfg.num_prefix_embeddings, cfg.d_model),
+                    jnp.bfloat16)
+            params, opt, m = step(params, opt, batch)
+            if i % 10 == 0 or i == args.steps - 1:
+                print(f"step {i:4d} loss {float(m['loss']):.4f} "
+                      f"({(i + 1) * args.batch * args.seq_len / (time.time() - t0):.0f} tok/s)")
+        if args.ckpt:
+            checkpoint.save(args.ckpt, {"params": params})
+            print("saved", args.ckpt)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+from repro.models.model import Model, input_specs
+
+__all__ = ["Model", "input_specs"]

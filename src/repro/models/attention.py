@@ -1,0 +1,270 @@
+"""GQA attention block: fused QKV, RoPE, chunked flash-style attention,
+KV cache (full, or ring-buffer for sliding-window archs).
+
+Two attention paths:
+
+- ``chunked_attention`` — pure-jnp online-softmax over KV blocks with a
+  static Python loop over Q blocks. GSPMD partitions it transparently
+  (batch/heads/seq shardable), it never materializes the (Sq, Skv)
+  score matrix, and causal/window *block skipping* is static — q-chunk i
+  only scans KV blocks it can see, making windowed prefill linear. This
+  is the default path and what the dry-run lowers.
+- Pallas ``flash_attention`` / ``decode_attention`` (kernels/) — the
+  TPU hot path, selected by ``cfg.use_pallas`` for single-shard or
+  shard_map execution; validated against the same oracle.
+
+The fused-QKV projection is the paper's V1 graph-parallelism realized
+as one wide GEMM (DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import constrain
+from repro.kernels import ops
+from repro.models import layers
+from repro.models.params import ParamSpec
+
+
+# ---------------------------------------------------------------------------
+# Param specs
+# ---------------------------------------------------------------------------
+
+def attention_specs(cfg: ModelConfig, cross: bool = False) -> Dict:
+    D, qd, kvd = cfg.d_model, cfg.q_dim, cfg.kv_dim
+    specs: Dict = {}
+    if cfg.fuse_qkv and not cross:
+        specs["wqkv"] = layers.linear_spec(
+            D, qd + 2 * kvd, ("embed", "qkv_fused"), bias=cfg.qkv_bias,
+            bias_axis="qkv_fused")
+    else:
+        specs["wq"] = layers.linear_spec(D, qd, ("embed", "heads"),
+                                         bias=cfg.qkv_bias,
+                                         bias_axis="heads")
+        specs["wk"] = layers.linear_spec(D, kvd, ("embed", "heads"),
+                                         bias=cfg.qkv_bias,
+                                         bias_axis="heads")
+        specs["wv"] = layers.linear_spec(D, kvd, ("embed", "heads"),
+                                         bias=cfg.qkv_bias,
+                                         bias_axis="heads")
+    specs["wo"] = layers.linear_spec(qd, D, ("heads", "embed"))
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# Chunked online-softmax attention (pure jnp, shardable)
+# ---------------------------------------------------------------------------
+
+NEG_INF = -1e30
+
+
+def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                      causal: bool = True, window: int = 0,
+                      q_offset: int = 0, bq: int = 512, bk: int = 512,
+                      scale: Optional[float] = None,
+                      unroll: bool = False) -> jax.Array:
+    """q: (B, Hq, Sq, D); k, v: (B, Hkv, Skv, D) → (B, Hq, Sq, D).
+
+    Static Q-chunk loop with per-chunk static KV bounds (causal/window
+    block skip); inner lax.scan over KV chunks with online softmax.
+    """
+    B, Hq, Sq, D = q.shape
+    _, Hkv, Skv, _ = k.shape
+    G = Hq // Hkv
+    scale = scale if scale is not None else D ** -0.5
+    bq = min(bq, Sq)
+    while Sq % bq:
+        bq //= 2
+    bk = min(bk, Skv)
+    while Skv % bk:
+        bk //= 2
+
+    # NB: no astype(f32) on k/v — an elementwise convert of the whole
+    # cache gets hoisted out of scan-over-layers loops by XLA, doubling
+    # HBM. Mixed matmuls with preferred_element_type keep reads at bf16.
+    qg = ((q.astype(jnp.float32) * scale).astype(q.dtype)
+          .reshape(B, Hkv, G, Sq, D))
+    kf = k
+    vf = v
+
+    outs = []
+    for i in range(Sq // bq):
+        q_i = qg[:, :, :, i * bq:(i + 1) * bq]       # (B,Hkv,G,bq,D)
+        q_lo = i * bq + q_offset
+        q_hi = q_lo + bq - 1
+        # static KV bounds for this q chunk
+        hi = min(Skv, q_hi + 1) if causal else Skv
+        lo = max(0, q_lo - window + 1) if window else 0
+        lo_b = (lo // bk) * bk
+        hi_b = min(Skv, ((hi + bk - 1) // bk) * bk)
+        n_blk = (hi_b - lo_b) // bk
+        k_i = kf[:, :, lo_b:hi_b].reshape(B, Hkv, n_blk, bk, D)
+        v_i = vf[:, :, lo_b:hi_b].reshape(B, Hkv, n_blk, bk, D)
+        k_i = jnp.moveaxis(k_i, 2, 0)                # (n_blk,B,Hkv,bk,D)
+        v_i = jnp.moveaxis(v_i, 2, 0)
+
+        qpos = q_lo + jnp.arange(bq)
+
+        def step(carry, inp):
+            m, l, acc = carry
+            k_c, v_c, blk = inp
+            s = jnp.einsum("bhgqd,bhkd->bhgqk", q_i, k_c,
+                           preferred_element_type=jnp.float32)
+            kpos = lo_b + blk * bk + jnp.arange(bk)
+            mask = jnp.ones((bq, bk), bool)
+            if causal:
+                mask &= kpos[None, :] <= qpos[:, None]
+            if window:
+                mask &= kpos[None, :] > qpos[:, None] - window
+            s = jnp.where(mask, s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, -1))
+            p = jnp.where(mask, jnp.exp(s - m_new[..., None]), 0.0)
+            alpha = jnp.exp(m - m_new)
+            l = l * alpha + jnp.sum(p, -1)
+            acc = acc * alpha[..., None] + jnp.einsum(
+                "bhgqk,bhkd->bhgqd", p.astype(v_c.dtype), v_c,
+                preferred_element_type=jnp.float32)
+            return (m_new, l, acc), None
+
+        init = (jnp.full((B, Hkv, G, bq), NEG_INF, jnp.float32),
+                jnp.zeros((B, Hkv, G, bq), jnp.float32),
+                jnp.zeros((B, Hkv, G, bq, D), jnp.float32))
+        (m, l, acc), _ = jax.lax.scan(
+            step, init, (k_i, v_i, jnp.arange(n_blk)), unroll=unroll)
+        l = jnp.where(l == 0.0, 1.0, l)
+        outs.append(acc / l[..., None])
+
+    out = jnp.concatenate(outs, axis=3) if len(outs) > 1 else outs[0]
+    return out.reshape(B, Hq, Sq, D).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention block forward
+# ---------------------------------------------------------------------------
+
+def _split_qkv(cfg: ModelConfig, p, x, use_pallas: bool):
+    qd, kvd = cfg.q_dim, cfg.kv_dim
+    if "wqkv" in p:
+        qkv = layers.linear(p["wqkv"], x, use_pallas=use_pallas)
+        qkv = constrain(qkv, ("batch", None, "qkv_fused"))
+        q = qkv[..., :qd]
+        k = qkv[..., qd:qd + kvd]
+        v = qkv[..., qd + kvd:]
+    else:
+        q = layers.linear(p["wq"], x, use_pallas=use_pallas)
+        k = layers.linear(p["wk"], x, use_pallas=use_pallas)
+        v = layers.linear(p["wv"], x, use_pallas=use_pallas)
+    return q, k, v
+
+
+def attention_forward(p, cfg: ModelConfig, x: jax.Array, *,
+                      positions: jax.Array, window: int = 0,
+                      kv_override: Optional[Tuple] = None,
+                      use_rope: bool = True,
+                      return_kv: bool = False):
+    """Full-sequence attention (training / prefill).
+
+    x: (B, S, D_model); positions: (B, S) absolute positions.
+    ``kv_override``: (k, v) in (B, Hkv, Skv, D) — cross-attention.
+    ``return_kv``: also return the (roped) K/V for cache fill.
+    """
+    B, S, _ = x.shape
+    H, Hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q, k, v = _split_qkv(cfg, p, x, cfg.use_pallas)
+    q = q.reshape(B, S, H, hd)
+    if kv_override is None:
+        k = k.reshape(B, S, Hkv, hd)
+        v = v.reshape(B, S, Hkv, hd)
+        if use_rope:
+            q = layers.apply_rope(q, positions, cfg.rope_theta)
+            k = layers.apply_rope(k, positions, cfg.rope_theta)
+        k = jnp.swapaxes(k, 1, 2)
+        v = jnp.swapaxes(v, 1, 2)
+        causal = True
+    else:
+        k, v = kv_override
+        causal = False
+    q = jnp.swapaxes(q, 1, 2)                    # (B, H, S, hd)
+    q = constrain(q, ("batch", "heads", None, None))
+    out = chunked_attention(q, k, v, causal=causal, window=window,
+                            q_offset=0, bq=cfg.attn_block,
+                            bk=cfg.attn_block, unroll=cfg.unroll_scans)
+    out = jnp.swapaxes(out, 1, 2).reshape(B, S, H * hd)
+    out = constrain(out, ("batch", None, "heads"))
+    out = layers.linear(p["wo"], out, use_pallas=cfg.use_pallas)
+    if return_kv:
+        return out, k, v
+    return out
+
+
+def attention_decode(p, cfg: ModelConfig, x: jax.Array, cache: Dict, *,
+                     window: int = 0,
+                     kv_override: Optional[Tuple] = None,
+                     use_rope: bool = True) -> Tuple[jax.Array, Dict]:
+    """One-token decode with functional cache update.
+
+    x: (B, 1, D); cache: {"k": (B,Hkv,S,hd), "v": ..., "lens": (B,)}.
+    ``lens`` counts tokens already in the cache; the new token is
+    written at slot ``lens % S`` (ring buffer when the cache is a
+    sliding window).
+    """
+    B = x.shape[0]
+    H, Hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q, k, v = _split_qkv(cfg, p, x, cfg.use_pallas)
+    q = q.reshape(B, H, hd)
+
+    if kv_override is not None:
+        k_all, v_all = kv_override
+        q = constrain(q, ("batch", "heads", None))
+        out = ops.decode_attention(
+            q, k_all, v_all, kv_len=cache["cross_lens"],
+            use_pallas=cfg.use_pallas)
+        out = out.reshape(B, 1, H * hd)
+        return layers.linear(p["wo"], out, use_pallas=cfg.use_pallas), cache
+
+    lens = cache["lens"]                          # (B,) int32
+    S_cache = cache["k"].shape[2]
+    pos = lens                                    # new token's position
+    if use_rope:
+        # q (B,H,hd) → (B,1,H,hd) with positions (B,1)
+        q = layers.apply_rope(q[:, None], pos[:, None],
+                              cfg.rope_theta)[:, 0]
+        k = layers.apply_rope(k.reshape(B, 1, Hkv, hd), pos[:, None],
+                              cfg.rope_theta).reshape(B, Hkv, hd)
+    else:
+        k = k.reshape(B, Hkv, hd)
+    v = v.reshape(B, Hkv, hd)
+    slot = lens % S_cache
+    bidx = jnp.arange(B)
+    new_k = cache["k"].at[bidx, :, slot].set(k.astype(cache["k"].dtype))
+    new_v = cache["v"].at[bidx, :, slot].set(v.astype(cache["v"].dtype))
+    kv_len = jnp.minimum(lens + 1, S_cache)
+    q = constrain(q, ("batch", "heads", None))
+    out = ops.decode_attention(q, new_k, new_v, kv_len=kv_len,
+                               use_pallas=cfg.use_pallas)
+    out = out.reshape(B, 1, H * hd)
+    out = layers.linear(p["wo"], out, use_pallas=cfg.use_pallas)
+    new_cache = dict(cache, k=new_k, v=new_v, lens=lens + 1)
+    return out, new_cache
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int,
+                  window: int = 0, dtype=jnp.bfloat16) -> Dict:
+    """Cache shapes; ``window`` > 0 caps the cache (ring buffer)."""
+    S = min(max_len, window) if window else max_len
+    return {
+        "k": jnp.zeros((batch, cfg.num_kv_heads, S, cfg.head_dim), dtype),
+        "v": jnp.zeros((batch, cfg.num_kv_heads, S, cfg.head_dim), dtype),
+        "lens": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def kv_cache_axes() -> Dict:
+    return {"k": ("batch", None, "kv_seq", None),
+            "v": ("batch", None, "kv_seq", None),
+            "lens": ("batch",)}

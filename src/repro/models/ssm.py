@@ -1,0 +1,194 @@
+"""Mamba-2 SSD (state-space duality) layer [arXiv:2405.21060].
+
+TPU adaptation (DESIGN.md §4): the SSD *chunked* algorithm is exactly
+the right decomposition for the MXU — intra-chunk work is dense
+(Q x Q) matmuls, inter-chunk state propagation is a short sequential
+scan of (H, P, N) states. The paper's fused-projection technique maps
+to the fused ``in_proj`` (z, x, B, C, dt are five independent GEMMs on
+the same normed input → one wide GEMM, logical axis ``qkv_fused``).
+
+Decode is an O(1) state update — this is why mamba2 runs ``long_500k``
+natively (no KV cache at all).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import constrain
+from repro.models import layers
+from repro.models.params import ParamSpec
+
+
+def ssm_specs(cfg: ModelConfig) -> Dict:
+    D, di, N = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    nh = cfg.ssm_heads
+    conv_ch = di + 2 * N
+    return {
+        "in_proj": {"w": ParamSpec((D, 2 * di + 2 * N + nh),
+                                   ("embed", "qkv_fused"))},
+        "conv_w": ParamSpec((cfg.ssm_conv, conv_ch), ("conv", None)),
+        "conv_b": ParamSpec((conv_ch,), (None,), init="zeros"),
+        "A_log": ParamSpec((nh,), (None,), init="zeros"),
+        "dt_bias": ParamSpec((nh,), (None,), init="zeros"),
+        "D_skip": ParamSpec((nh,), (None,), init="ones"),
+        "norm_w": ParamSpec((di,), (None,), init="ones"),
+        "out_proj": {"w": ParamSpec((di, D), ("heads", "embed"))},
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 state: Optional[jax.Array] = None
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv1d. x: (B, S, C); w: (width, C).
+
+    ``state``: (B, width-1, C) past inputs (decode). Returns
+    (y, new_state)."""
+    width = w.shape[0]
+    if state is None:
+        state = jnp.zeros(x.shape[:1] + (width - 1,) + x.shape[2:], x.dtype)
+    xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i].astype(x.dtype)
+            for i in range(width))
+    new_state = xp[:, -(width - 1):]
+    return jax.nn.silu(y + b.astype(x.dtype)), new_state
+
+
+def _split_in_proj(cfg: ModelConfig, zxbcdt: jax.Array):
+    di, N, nh = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di:di + di + 2 * N]
+    dt = zxbcdt[..., di + di + 2 * N:]
+    return z, xbc, dt
+
+
+def ssd_chunked(x: jax.Array, dt: jax.Array, A: jax.Array, Bm: jax.Array,
+                Cm: jax.Array, chunk: int,
+                init_state: Optional[jax.Array] = None,
+                unroll: bool = False) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD scan.
+
+    x: (B,S,H,P); dt: (B,S,H) (positive); A: (H,) negative;
+    Bm, Cm: (B,S,N). Returns (y (B,S,H,P), final_state (B,H,P,N)).
+    """
+    Bb, S, H, P = x.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, S)
+    while S % Q:
+        Q //= 2
+    nc = S // Q
+
+    # chunk-major layout for the scan: (nc, B, Q, ...)
+    xf = jnp.moveaxis(x.astype(jnp.float32).reshape(Bb, nc, Q, H, P), 1, 0)
+    dtf = jnp.moveaxis(dt.astype(jnp.float32).reshape(Bb, nc, Q, H), 1, 0)
+    Bf = jnp.moveaxis(Bm.astype(jnp.float32).reshape(Bb, nc, Q, N), 1, 0)
+    Cf = jnp.moveaxis(Cm.astype(jnp.float32).reshape(Bb, nc, Q, N), 1, 0)
+    Af = A.astype(jnp.float32)
+    tril = jnp.tril(jnp.ones((Q, Q), bool))
+
+    S0 = (jnp.zeros((Bb, H, P, N), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+
+    def step(s_prev, inp):
+        x_c, dt_c, B_c, C_c = inp          # (B,Q,H,P),(B,Q,H),(B,Q,N)x2
+        a = dt_c * Af                      # (B,Q,H) <= 0
+        L = jnp.cumsum(a, axis=1)          # within-chunk log decay
+        # intra-chunk (dense, MXU-friendly): one (Q,Q) matmul per head
+        CB = jnp.einsum("bqn,bkn->bqk", C_c, B_c)      # (B,Q,Q)
+        diff = L[:, :, None, :] - L[:, None, :, :]     # (B,Q,Q,H)
+        M = jnp.where(tril[None, :, :, None], jnp.exp(diff), 0.0)
+        M = M * (CB[..., None] * dt_c[:, None, :, :])  # (B,Q,Q,H)
+        y_intra = jnp.einsum("bqkh,bkhp->bqhp", M, x_c)
+        # chunk state contribution
+        decay_to_end = jnp.exp(L[:, -1:, :] - L)       # (B,Q,H)
+        S_c = jnp.einsum("bqh,bqn,bqhp->bhpn",
+                         decay_to_end * dt_c, B_c, x_c)
+        # inter-chunk contribution from the carried state
+        y_inter = jnp.einsum("bqn,bhpn->bqhp", C_c, s_prev)
+        y_inter = y_inter * jnp.exp(L)[..., None]
+        gamma = jnp.exp(L[:, -1])                      # (B,H)
+        s_new = s_prev * gamma[..., None, None] + S_c
+        return s_new, (y_intra + y_inter)
+
+    final, ys = jax.lax.scan(step, S0, (xf, dtf, Bf, Cf), unroll=unroll)
+    y = jnp.moveaxis(ys, 0, 1).reshape(Bb, S, H, P)    # (B,S,H,P)
+    return y.astype(x.dtype), final
+
+
+def ssm_forward(p, cfg: ModelConfig, x: jax.Array,
+                conv_state: Optional[jax.Array] = None,
+                ssd_state: Optional[jax.Array] = None,
+                return_state: bool = False):
+    """Full-sequence SSD layer. x: (B, S, D)."""
+    B, S, D = x.shape
+    di, N, H, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    zxbcdt = layers.linear(p["in_proj"], x, use_pallas=cfg.use_pallas)
+    zxbcdt = constrain(zxbcdt, ("batch", None, "qkv_fused"))
+    z, xbc, dt = _split_in_proj(cfg, zxbcdt)
+    xbc, new_conv = _causal_conv(xbc, p["conv_w"], p["conv_b"], conv_state)
+    xs = xbc[..., :di].reshape(B, S, H, P)
+    Bm = xbc[..., di:di + N]
+    Cm = xbc[..., di + N:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    y, final_state = ssd_chunked(xs, dt, A, Bm, Cm, cfg.ssm_chunk,
+                                 init_state=ssd_state,
+                                 unroll=cfg.unroll_scans)
+    y = y + xs.astype(y.dtype) * p["D_skip"].astype(y.dtype)[None, None, :, None]
+    y = y.reshape(B, S, di)
+    y = layers.rmsnorm(y * jax.nn.silu(z), p["norm_w"], cfg.norm_eps)
+    out = layers.linear(p["out_proj"], y, use_pallas=cfg.use_pallas)
+    if return_state:
+        return out, (new_conv, final_state)
+    return out
+
+
+def ssm_decode(p, cfg: ModelConfig, x: jax.Array, cache: Dict
+               ) -> Tuple[jax.Array, Dict]:
+    """O(1) single-token state update. x: (B, 1, D)."""
+    B = x.shape[0]
+    di, N, H, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    zxbcdt = layers.linear(p["in_proj"], x, use_pallas=cfg.use_pallas)
+    z, xbc, dt = _split_in_proj(cfg, zxbcdt)
+    xbc, new_conv = _causal_conv(xbc, p["conv_w"], p["conv_b"],
+                                 cache["conv"])
+    xs = xbc[:, 0, :di].reshape(B, H, P)
+    Bm = xbc[:, 0, di:di + N]
+    Cm = xbc[:, 0, di + N:]
+    dt1 = jax.nn.softplus(dt[:, 0].astype(jnp.float32)
+                          + p["dt_bias"].astype(jnp.float32))   # (B,H)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    S_prev = cache["state"].astype(jnp.float32)                # (B,H,P,N)
+    decay = jnp.exp(dt1 * A[None])                             # (B,H)
+    dBx = jnp.einsum("bh,bhp,bn->bhpn", dt1, xs.astype(jnp.float32),
+                     Bm.astype(jnp.float32))
+    S_new = S_prev * decay[..., None, None] + dBx
+    y = jnp.einsum("bhpn,bn->bhp", S_new, Cm.astype(jnp.float32))
+    y = y + xs.astype(jnp.float32) * p["D_skip"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(B, 1, di).astype(x.dtype)
+    y = layers.rmsnorm(y * jax.nn.silu(z), p["norm_w"], cfg.norm_eps)
+    out = layers.linear(p["out_proj"], y, use_pallas=cfg.use_pallas)
+    new_cache = dict(cache, conv=new_conv,
+                     state=S_new.astype(cache["state"].dtype),
+                     lens=cache["lens"] + 1)
+    return out, new_cache
+
+
+def init_ssm_cache(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16):
+    di, N = cfg.d_inner, cfg.ssm_state
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, di + 2 * N), dtype),
+        "state": jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_head_dim, N),
+                           jnp.float32),
+        "lens": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def ssm_cache_axes() -> Dict:
+    return {"conv": ("batch", None, "qkv_fused"),
+            "state": ("batch", "heads", None, None),
+            "lens": ("batch",)}

@@ -1,0 +1,15 @@
+from repro.quant.quantize import (
+    QuantizedTensor,
+    quantize_q8_0,
+    quantize_q4_0,
+    dequantize,
+    quantize,
+    pack_int4,
+    unpack_int4,
+    quantize_tree,
+)
+
+__all__ = [
+    "QuantizedTensor", "quantize_q8_0", "quantize_q4_0", "dequantize",
+    "quantize", "pack_int4", "unpack_int4", "quantize_tree",
+]

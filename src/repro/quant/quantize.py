@@ -1,0 +1,185 @@
+"""Groupwise weight quantization — llama.cpp k-quant analogues.
+
+Formats (paper §4.2):
+- ``q8_0``: groups of 32 along the reduction dim; int8 payload + one
+  f16-ish scale per group → 8.5 bits/weight.
+- ``q4_0``: groups of 32; symmetric int4 in [-8, 7], two nibbles packed
+  per int8 byte → 4.5 bits/weight (the paper's footnote).
+
+A ``QuantizedTensor`` is a pytree (works inside jit / pjit / scan), so
+quantized models shard and checkpoint exactly like bf16 ones. The
+packed layout matches what ``kernels/quant_matmul.py`` consumes: the
+reduction dim K is the second-to-last axis, scales have shape
+``K//group`` on that axis.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class QuantizedTensor:
+    """Groupwise-quantized 2-D (or stacked 3-D) weight.
+
+    data:   int8. q8_0 → shape (..., K, N); q4_0 → (..., K//2, N) packed.
+    scales: activation-dtype, shape (..., K//group, N broadcast? no:
+            (..., K//group, N)) — per (group, column) scale, llama.cpp
+            row-major k-quant transposed to column-major matmul layout.
+    """
+    data: jax.Array
+    scales: jax.Array
+    fmt: str            # "q8_0" | "q4_0"
+    shape: Tuple[int, ...]   # logical (unquantized) shape (..., K, N)
+    group: int = 32
+
+    # -- pytree protocol -------------------------------------------------
+    def tree_flatten(self):
+        return (self.data, self.scales), (self.fmt, self.shape, self.group)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        data, scales = children
+        fmt, shape, group = aux
+        return cls(data, scales, fmt, shape, group)
+
+    @property
+    def dtype(self):
+        return self.scales.dtype
+
+    @property
+    def logical_shape(self) -> Tuple[int, ...]:
+        """Shape derived from the *current* data/scales arrays.
+
+        The static ``shape`` field goes stale when a stacked
+        QuantizedTensor is sliced by scan-over-layers (pytree children
+        get a leading dim removed; aux data doesn't) — always use this
+        for compute."""
+        k2 = self.data.shape[-2]
+        K = 2 * k2 if self.fmt == "q4_0" else k2
+        return tuple(self.data.shape[:-2]) + (K, self.data.shape[-1])
+
+    @property
+    def ndim(self):
+        return len(self.shape)
+
+    @property
+    def k_axis(self) -> int:
+        return len(self.shape) - 2
+
+    @property
+    def logical_nbytes(self) -> int:
+        import numpy as np
+        return int(np.prod(self.shape)) * 2
+
+    @property
+    def quant_nbytes(self) -> int:
+        return self.data.size * self.data.dtype.itemsize + \
+            self.scales.size * self.scales.dtype.itemsize
+
+
+def pack_int4(q: jax.Array) -> jax.Array:
+    """Pack int4 values in [-8,7] pairwise along axis -2 into int8.
+
+    Element (2i, n) goes to the low nibble of packed (i, n); (2i+1, n)
+    to the high nibble.
+    """
+    assert q.shape[-2] % 2 == 0, q.shape
+    lo = q[..., 0::2, :] & 0x0F
+    hi = q[..., 1::2, :] & 0x0F
+    return (lo | (hi << 4)).astype(jnp.int8)
+
+
+def unpack_int4(packed: jax.Array) -> jax.Array:
+    """Inverse of :func:`pack_int4` → int8 values in [-8, 7]."""
+    lo = (packed & 0x0F).astype(jnp.int8)
+    hi = ((packed >> 4) & 0x0F).astype(jnp.int8)
+    # sign-extend 4-bit two's complement
+    lo = jnp.where(lo > 7, lo - 16, lo)
+    hi = jnp.where(hi > 7, hi - 16, hi)
+    k2 = packed.shape[-2]
+    out_shape = packed.shape[:-2] + (2 * k2,) + packed.shape[-1:]
+    # interleave: stack -> (..., k2, 2, n), row-major reshape -> (..., 2*k2, n)
+    out = jnp.stack([lo, hi], axis=-2)
+    return out.reshape(out_shape)
+
+
+def _group_scales(w: jax.Array, group: int, qmax: float):
+    *lead, K, N = w.shape
+    assert K % group == 0, (K, group)
+    wg = w.reshape(*lead, K // group, group, N)
+    amax = jnp.max(jnp.abs(wg), axis=-2)          # (..., K//group, N)
+    scale = (amax / qmax).astype(jnp.float32)
+    scale = jnp.where(scale == 0, 1.0, scale)
+    return wg, scale
+
+
+def quantize_q8_0(w: jax.Array, group: int = 32) -> QuantizedTensor:
+    wg, scale = _group_scales(w.astype(jnp.float32), group, 127.0)
+    q = jnp.clip(jnp.round(wg / scale[..., None, :]), -127, 127)
+    q = q.astype(jnp.int8).reshape(w.shape)
+    return QuantizedTensor(q, scale.astype(jnp.bfloat16), "q8_0",
+                           tuple(w.shape), group)
+
+
+def quantize_q4_0(w: jax.Array, group: int = 32) -> QuantizedTensor:
+    wg, scale = _group_scales(w.astype(jnp.float32), group, 7.0)
+    q = jnp.clip(jnp.round(wg / scale[..., None, :]), -8, 7)
+    q = q.astype(jnp.int8).reshape(w.shape)
+    return QuantizedTensor(pack_int4(q), scale.astype(jnp.bfloat16),
+                           "q4_0", tuple(w.shape), group)
+
+
+def quantize(w: jax.Array, fmt: str, group: int = 32):
+    if fmt in ("bf16", "f16", "f32"):
+        return w
+    if fmt == "q8_0":
+        return quantize_q8_0(w, group)
+    if fmt == "q4_0":
+        return quantize_q4_0(w, group)
+    raise ValueError(fmt)
+
+
+def dequantize(qt: QuantizedTensor, dtype=jnp.bfloat16) -> jax.Array:
+    if qt.fmt == "q8_0":
+        q = qt.data
+    elif qt.fmt == "q4_0":
+        q = unpack_int4(qt.data)
+    else:
+        raise ValueError(qt.fmt)
+    *lead, K, N = qt.logical_shape
+    qg = q.reshape(*lead, K // qt.group, qt.group, N).astype(jnp.float32)
+    w = qg * qt.scales[..., None, :].astype(jnp.float32)
+    return w.reshape(*lead, K, N).astype(dtype)
+
+
+def quantize_tree(params, fmt: str, group: int = 32,
+                  predicate=None):
+    """Quantize every >=2-D weight in a param pytree.
+
+    ``predicate(path, leaf) -> bool`` limits which leaves quantize
+    (default: everything with ndim >= 2 and K % group == 0 — i.e. skip
+    norms, biases, conv kernels and embeddings stay quantizable).
+    """
+    if fmt in ("bf16", "f16", "f32"):
+        return params
+
+    def maybe_quant(path, leaf):
+        if isinstance(leaf, QuantizedTensor):
+            return leaf
+        pred_ok = predicate is None or predicate(path, leaf)
+        path_str = jax.tree_util.keystr(path)
+        is_weight = (getattr(leaf, "ndim", 0) >= 2
+                     and leaf.shape[-2] % group == 0
+                     and "embed" not in path_str
+                     and "norm" not in path_str)
+        if pred_ok and is_weight:
+            return quantize(leaf, fmt, group)
+        return leaf
+
+    return jax.tree_util.tree_map_with_path(maybe_quant, params)

@@ -1,0 +1,5 @@
+from repro.serving.engine import ServingEngine, Request, EngineStats
+from repro.serving.sampler import SamplingConfig, sample
+
+__all__ = ["ServingEngine", "Request", "EngineStats", "SamplingConfig",
+           "sample"]

@@ -1,0 +1,148 @@
+"""Batched serving engine: slot-based continuous batching.
+
+The engine owns a fixed-size decode batch (``slots``). Requests queue
+up; free slots are filled by prefilling the prompt (one sequence at a
+time into its slot — per-slot cache insertion), and every ``step()``
+decodes one token for all active slots. Finished sequences (EOS or
+max_new_tokens) free their slot.
+
+This is the deployment shape of the paper's decode phase: the
+throughput the roofline predicts for ``decode_32k`` is this loop's
+steady state.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import Model
+from repro.serving.sampler import SamplingConfig, sample
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray               # (S,) int32
+    max_new_tokens: int = 32
+    eos_id: int = -1                 # -1 → never stops early
+    # filled by the engine:
+    output: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+@dataclasses.dataclass
+class EngineStats:
+    steps: int = 0
+    tokens_generated: int = 0
+    prefills: int = 0
+
+
+class ServingEngine:
+    def __init__(self, model: Model, params, *, slots: int = 4,
+                 max_len: int = 1024,
+                 sampling: SamplingConfig = SamplingConfig(),
+                 extra_inputs: Optional[Dict[str, Any]] = None,
+                 rng: Optional[jax.Array] = None):
+        self.model = model
+        self.cfg = model.cfg
+        self.params = params
+        self.slots = slots
+        self.max_len = max_len
+        self.sampling = sampling
+        self.extra = extra_inputs or {}
+        self.rng = rng if rng is not None else jax.random.PRNGKey(0)
+
+        self.cache = model.init_cache(slots, max_len)
+        self.active: List[Optional[Request]] = [None] * slots
+        self.queue: List[Request] = []
+        self.last_token = np.zeros((slots,), np.int32)
+        self.stats = EngineStats()
+
+        self._decode = jax.jit(model.decode_step)
+        self._prefill_one = jax.jit(self._prefill_impl)
+
+    # -- single-sequence prefill into one slot ---------------------------
+    def _prefill_impl(self, params, tokens, cache, slot):
+        """Prefill one sequence (1, S) and splice its cache rows into the
+        batch cache at ``slot``."""
+        one = self.model.init_cache(1, self.max_len)
+        batch = {"tokens": tokens, **{
+            k: v[None] if hasattr(v, "shape") else v
+            for k, v in self.extra.items()}}
+        logits, one = self.model.prefill(params, batch, one)
+
+        def splice(full, single):
+            # single rows live on axis with size 1; find batch axis by
+            # matching shapes: full (..., slots, ...) vs single (..., 1, ...)
+            diff = [i for i, (a, b) in enumerate(
+                zip(full.shape, single.shape)) if a != b]
+            ax = diff[0] if diff else 0
+            idx = [slice(None)] * full.ndim
+            start = [0] * full.ndim
+            start[ax] = slot
+            return jax.lax.dynamic_update_slice(
+                full, single.astype(full.dtype), tuple(start))
+
+        new_cache = jax.tree_util.tree_map(splice, cache, one)
+        return logits[0], new_cache
+
+    # -- public API --------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _fill_slots(self) -> None:
+        for s in range(self.slots):
+            if self.active[s] is None and self.queue:
+                req = self.queue.pop(0)
+                toks = jnp.asarray(req.prompt, jnp.int32)[None]
+                logits, self.cache = self._prefill_one(
+                    self.params, toks, self.cache, s)
+                self.rng, k = jax.random.split(self.rng)
+                nxt = int(sample(logits[None], k, self.sampling)[0])
+                req.output.append(nxt)
+                self.last_token[s] = nxt
+                self.stats.prefills += 1
+                self.stats.tokens_generated += 1
+                if nxt == req.eos_id or len(req.output) >= req.max_new_tokens:
+                    req.done = True          # first token already ends it
+                else:
+                    self.active[s] = req
+
+    def step(self) -> int:
+        """One decode step for all active slots. Returns #active."""
+        self._fill_slots()
+        if not any(r is not None for r in self.active):
+            return 0
+        toks = jnp.asarray(self.last_token[:, None])
+        logits, self.cache = self._decode(self.params, toks, self.cache)
+        self.rng, k = jax.random.split(self.rng)
+        nxt = np.asarray(sample(logits, k, self.sampling))
+        self.stats.steps += 1
+        n_active = 0
+        for s, req in enumerate(self.active):
+            if req is None:
+                continue
+            tok = int(nxt[s])
+            req.output.append(tok)
+            self.last_token[s] = tok
+            self.stats.tokens_generated += 1
+            if tok == req.eos_id or len(req.output) >= req.max_new_tokens:
+                req.done = True
+                self.active[s] = None
+            else:
+                n_active += 1
+        return n_active
+
+    def run(self, max_steps: int = 10000) -> None:
+        """Drain queue + active slots."""
+        for _ in range(max_steps):
+            self._fill_slots()
+            if not self.queue and not any(
+                    r is not None for r in self.active):
+                return
+            self.step()

@@ -1,0 +1,13 @@
+from repro.training.optimizer import (
+    AdamWConfig, AdamWState, init_state, apply_updates, schedule,
+    global_norm,
+)
+from repro.training.trainer import TrainConfig, make_train_step
+from repro.training.data import DataConfig, batches
+from repro.training import checkpoint
+
+__all__ = [
+    "AdamWConfig", "AdamWState", "init_state", "apply_updates",
+    "schedule", "global_norm", "TrainConfig", "make_train_step",
+    "DataConfig", "batches", "checkpoint",
+]

@@ -1,0 +1,86 @@
+"""Msgpack pytree checkpointing (no orbax in this container).
+
+Arrays are stored as raw bytes + dtype/shape; the tree structure is
+reconstructed from nested msgpack maps. QuantizedTensor nodes serialize
+via their pytree children plus static aux data.
+"""
+from __future__ import annotations
+
+import os
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+from repro.quant.quantize import QuantizedTensor
+
+_ARR = "__arr__"
+_QT = "__quant__"
+
+
+def _encode(obj):
+    if isinstance(obj, QuantizedTensor):
+        return {_QT: True,
+                "data": _encode(obj.data), "scales": _encode(obj.scales),
+                "fmt": obj.fmt, "shape": list(obj.shape),
+                "group": obj.group}
+    if isinstance(obj, (jax.Array, np.ndarray)):
+        arr = np.asarray(obj)
+        if arr.dtype == jnp.bfloat16:
+            return {_ARR: True, "dtype": "bfloat16",
+                    "shape": list(arr.shape),
+                    "bytes": arr.view(np.uint16).tobytes()}
+        return {_ARR: True, "dtype": str(arr.dtype),
+                "shape": list(arr.shape), "bytes": arr.tobytes()}
+    if isinstance(obj, dict):
+        return {k: _encode(v) for k, v in obj.items()}
+    if hasattr(obj, "_asdict"):   # NamedTuple — check BEFORE tuple
+        return {"__nt__": type(obj).__name__,
+                **{k: _encode(v) for k, v in obj._asdict().items()}}
+    if isinstance(obj, (list, tuple)):
+        return {"__list__": [_encode(v) for v in obj],
+                "__tuple__": isinstance(obj, tuple)}
+    if isinstance(obj, (int, float, str, bool)) or obj is None:
+        return obj
+    raise TypeError(f"cannot checkpoint {type(obj)}")
+
+
+def _decode(obj):
+    if isinstance(obj, dict):
+        if obj.get(_ARR):
+            if obj["dtype"] == "bfloat16":
+                arr = np.frombuffer(obj["bytes"], np.uint16).reshape(
+                    obj["shape"])
+                return jnp.asarray(arr).view(jnp.bfloat16)
+            arr = np.frombuffer(
+                obj["bytes"], np.dtype(obj["dtype"])).reshape(obj["shape"])
+            return jnp.asarray(arr)
+        if obj.get(_QT):
+            return QuantizedTensor(
+                _decode(obj["data"]), _decode(obj["scales"]), obj["fmt"],
+                tuple(obj["shape"]), obj["group"])
+        if "__list__" in obj:
+            items = [_decode(v) for v in obj["__list__"]]
+            return tuple(items) if obj.get("__tuple__") else items
+        if "__nt__" in obj:
+            from repro.training.optimizer import AdamWState
+            kinds = {"AdamWState": AdamWState}
+            cls = kinds[obj["__nt__"]]
+            return cls(**{k: _decode(v) for k, v in obj.items()
+                          if k != "__nt__"})
+        return {k: _decode(v) for k, v in obj.items()}
+    return obj
+
+
+def save(path: str, tree: Any) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(path, "wb") as f:
+        f.write(msgpack.packb(_encode(tree), use_bin_type=True))
+
+
+def restore(path: str) -> Any:
+    with open(path, "rb") as f:
+        return _decode(msgpack.unpackb(f.read(), raw=False,
+                                       strict_map_key=False))

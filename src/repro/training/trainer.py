@@ -1,0 +1,66 @@
+"""Training step assembly: loss → grads → AdamW, with optional
+microbatch gradient accumulation (a §Perf lever: trades activation
+memory against step latency).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import Model
+from repro.training import optimizer as opt
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    adamw: opt.AdamWConfig = opt.AdamWConfig()
+    microbatches: int = 1     # grad accumulation steps per train_step
+
+
+def make_train_step(model: Model, tcfg: TrainConfig):
+    """Returns train_step(params, opt_state, batch) → (params, opt_state,
+    metrics). jit/pjit is applied by the caller with shardings."""
+
+    def loss_fn(params, batch):
+        return model.loss(params, batch)
+
+    def single(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        params, opt_state, metrics = opt.apply_updates(
+            params, grads, opt_state, tcfg.adamw)
+        metrics["loss"] = loss
+        return params, opt_state, metrics
+
+    if tcfg.microbatches == 1:
+        return single
+
+    n = tcfg.microbatches
+
+    def accumulated(params, opt_state, batch):
+        def reshape(x):
+            b = x.shape[0]
+            return x.reshape(n, b // n, *x.shape[1:])
+        micro = jax.tree_util.tree_map(reshape, batch)
+
+        def body(carry, mb):
+            loss_sum, grads = carry
+            l, g = jax.value_and_grad(loss_fn)(params, mb)
+            grads = jax.tree_util.tree_map(jnp.add, grads, g)
+            return (loss_sum + l, grads), None
+
+        zero_grads = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (loss_sum, grads), _ = jax.lax.scan(
+            body, (jnp.zeros((), jnp.float32), zero_grads), micro)
+        grads = jax.tree_util.tree_map(lambda g: g / n, grads)
+        params, opt_state, metrics = opt.apply_updates(
+            params, grads, opt_state, tcfg.adamw)
+        metrics["loss"] = loss_sum / n
+        return params, opt_state, metrics
+
+    return accumulated

@@ -1,0 +1,9 @@
+import os
+
+# Keep smoke tests on the single real device (the dry-run sets its own
+# device count in its own process). Pallas kernels run in interpret mode.
+os.environ.setdefault("REPRO_PALLAS_INTERPRET", "1")
+
+import jax
+
+jax.config.update("jax_enable_x64", False)

@@ -1,0 +1,162 @@
+"""Core layer: graph IR, scheduler, cost model vs the paper's numbers."""
+import pytest
+
+from repro.configs.paper_models import LLAMA32_1B, QWEN2_0_5B
+from repro.core import (
+    Op, a17_cpu, backend_throughput, build_decoder_graph,
+    find_concurrent_gemms, fusion_plan, model_flops, plan, profile_phases,
+    roofline, simulate_version,
+)
+from repro.configs import INPUT_SHAPES, get_config
+
+
+# ---------------------------------------------------------------------------
+# Graph construction (paper §3, Algorithm 1)
+# ---------------------------------------------------------------------------
+
+def test_seven_weight_matmuls_per_layer():
+    """Paper §6.2: 7 named weight GEMMs per decoder layer: Q, K, V,
+    kqv_out, ffn_gate, ffn_up, ffn_down."""
+    g = build_decoder_graph(LLAMA32_1B, seq=1, kv_len=64, fused=False)
+    tags = g.matmuls_by_tag()
+    for t in ("Qcur", "Kcur", "Vcur", "kqv_out", "ffn_gate", "ffn_up",
+              "ffn_down"):
+        assert len(tags[t]) == LLAMA32_1B.num_layers, t
+
+
+def test_fusion_reduces_node_count():
+    g0 = build_decoder_graph(LLAMA32_1B, seq=1, kv_len=64, fused=False)
+    g1 = build_decoder_graph(LLAMA32_1B, seq=1, kv_len=64, fused=True)
+    # fusing {Q,K,V}->1 and {gate,up}->1 saves 3 nodes/layer
+    assert len(g0) - len(g1) == 3 * LLAMA32_1B.num_layers
+
+
+def test_graph_flops_match_6nd():
+    """Decode FLOPs/token ≈ 2·N_params (plus attention)."""
+    g = build_decoder_graph(LLAMA32_1B, seq=1, kv_len=0, fused=False)
+    n = LLAMA32_1B.param_count()
+    mm = sum(nd.flops for nd in g.nodes if nd.op is Op.MUL_MAT
+             and nd.weight_bytes)
+    assert 0.8 < mm / (2 * n) < 1.2
+
+
+# ---------------------------------------------------------------------------
+# Scheduler (paper §7)
+# ---------------------------------------------------------------------------
+
+def test_concurrent_sets_found():
+    """The paper's Fig 7 coloring: {Q,K,V} and {gate,up} are
+    independent GEMM sets within each layer."""
+    g = build_decoder_graph(LLAMA32_1B, seq=1, kv_len=64, fused=False)
+    sets = find_concurrent_gemms(g)
+    attn_sets = [s for s in sets if s.block == "attn"]
+    ffn_sets = [s for s in sets if s.block == "ffn"]
+    assert len(attn_sets) == LLAMA32_1B.num_layers
+    assert all(len(s.node_ids) == 3 for s in attn_sets)     # Q, K, V
+    assert len(ffn_sets) == LLAMA32_1B.num_layers
+    assert all(len(s.node_ids) == 2 for s in ffn_sets)      # gate, up
+    fp = fusion_plan(g)
+    assert fp.fuse_qkv and fp.fuse_gate_up
+    assert fp.nodes_saved == 3 * LLAMA32_1B.num_layers
+
+
+def test_version_ladder_matches_paper():
+    """Paper Figs 8-10: 11.5 → 13 → 15 → 6 tk/s (±10%)."""
+    targets = {"v0": 11.5, "v1": 13.0, "v2": 15.0, "v3": 6.0}
+    for v, want in targets.items():
+        got = simulate_version(LLAMA32_1B, v, threads=4,
+                               kv_len=64).tokens_per_s
+        assert abs(got - want) / want < 0.10, (v, got, want)
+
+
+def test_ladder_ordering():
+    r = {v: simulate_version(LLAMA32_1B, v, threads=4).tokens_per_s
+         for v in ("v0", "v1", "v2", "v3")}
+    assert r["v0"] < r["v1"] < r["v2"]       # graph-parallel then tensor
+    assert r["v3"] < r["v0"]                 # heterogeneous regression
+
+
+# ---------------------------------------------------------------------------
+# Fig 4 headline numbers
+# ---------------------------------------------------------------------------
+
+def test_cpu_beats_gpu_for_1b_f16():
+    """Paper abstract: 2-thread CPU 17 tk/s vs GPU 12.8 tk/s."""
+    cpu = backend_throughput(LLAMA32_1B, "cpu", threads=2)
+    gpu = backend_throughput(LLAMA32_1B, "gpu")
+    assert abs(cpu - 17.0) / 17.0 < 0.10, cpu
+    assert abs(gpu - 12.8) / 12.8 < 0.10, gpu
+    assert cpu > gpu
+
+
+def test_gpu_wins_for_large_models():
+    """Paper §5: beyond ~1.5B the GPU regains the lead (Q4, many-thread
+    CPU still behind)."""
+    from repro.configs.paper_models import MISTRAL_7B
+    cpu = backend_throughput(MISTRAL_7B, "cpu", threads=6,
+                             weight_format="q4_0")
+    gpu = backend_throughput(MISTRAL_7B, "gpu", weight_format="q4_0")
+    assert gpu > cpu
+
+
+def test_thread_scaling_law():
+    """Paper C5: throughput peaks near the P-core count and degrades
+    with oversubscription."""
+    tps = [backend_throughput(QWEN2_0_5B, "cpu", threads=t)
+           for t in (1, 2, 4, 8, 12)]
+    assert tps[1] > tps[0]                  # 2 threads beat 1
+    assert tps[-1] < max(tps)               # oversubscription hurts
+    assert max(tps) == max(tps[1], tps[2])  # peak at 2-4 threads
+
+
+def test_q4_speedup():
+    """Paper §5.3: Q4 gives 1.5-2.5x over F16."""
+    f16 = backend_throughput(LLAMA32_1B, "cpu", threads=4,
+                             weight_format="f16")
+    q4 = backend_throughput(LLAMA32_1B, "cpu", threads=4,
+                            weight_format="q4_0")
+    assert 1.5 < q4 / f16 < 3.0
+
+
+# ---------------------------------------------------------------------------
+# Profiler (paper §6, Figs 5/6)
+# ---------------------------------------------------------------------------
+
+def test_matmul_dominates():
+    profs = profile_phases(LLAMA32_1B, threads=2)
+    assert profs["prefill"].mul_mat_share > 0.80     # paper: 87.6%
+    assert profs["decode"].mul_mat_share > 0.70      # paper: 76.2%
+
+
+def test_ffn_matmuls_are_heaviest():
+    """Paper Fig 6: the FFN block (up/gate/down) dominates matmul time."""
+    profs = profile_phases(LLAMA32_1B, threads=2)
+    for phase in profs.values():
+        by = phase.by_matmul_tag
+        ffn = by["ffn_up"] + by["ffn_gate"] + by["ffn_down"]
+        attn = by["Qcur"] + by["Kcur"] + by["Vcur"] + by["kqv_out"]
+        assert ffn > attn
+
+
+# ---------------------------------------------------------------------------
+# Dispatch planner + roofline plumbing
+# ---------------------------------------------------------------------------
+
+def test_planner_quantizes_decode_not_train():
+    cfg = get_config("deepseek-7b")
+    p_dec = plan(cfg, INPUT_SHAPES["decode_32k"])
+    p_train = plan(cfg, INPUT_SHAPES["train_4k"])
+    dec_prec = {d.precision for d in p_dec.decisions}
+    train_prec = {d.precision for d in p_train.decisions
+                  if d.tag != "lm_head"}
+    assert "q4_0" in dec_prec              # decode GEMVs are memory-bound
+    assert train_prec == {"bf16"}          # train GEMMs are MXU-bound
+
+
+def test_roofline_terms():
+    t = roofline(hlo_flops=1e12, hlo_bytes=1e11, collective_bytes=1e9,
+                 chips=256)
+    assert t.compute_s == pytest.approx(1e12 / 197e12)
+    assert t.memory_s == pytest.approx(1e11 / 819e9)
+    assert t.collective_s == pytest.approx(1e9 / 50e9)
+    assert t.dominant == "memory"

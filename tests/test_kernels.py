@@ -1,0 +1,155 @@
+"""Per-kernel interpret-mode allclose sweeps vs the ref.py oracles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ref
+from repro.kernels.decode_attention import decode_attention
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.quant_matmul import quant_matmul
+from repro.quant import quantize_q4_0, quantize_q8_0
+
+
+# ---------------------------------------------------------------------------
+# quant_matmul
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mkn", [(128, 256, 128), (8, 64, 128),
+                                 (256, 512, 384), (64, 1024, 64)])
+@pytest.mark.parametrize("quant", [quantize_q8_0, quantize_q4_0])
+@pytest.mark.parametrize("xdtype", [jnp.bfloat16, jnp.float32])
+def test_quant_matmul_allclose(mkn, quant, xdtype):
+    M, K, N = mkn
+    k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+    x = jax.random.normal(k1, (M, K), jnp.float32).astype(xdtype)
+    w = quant(jax.random.normal(k2, (K, N), jnp.float32))
+    bm, bn, bk = min(128, M), min(128, N), min(256, K)
+    out = quant_matmul(x, w, bm=bm, bn=bn, bk=bk, interpret=True,
+                       out_dtype=jnp.float32)
+    want = ref.quant_matmul_ref(x, w, out_dtype=jnp.float32)
+    scale = np.abs(np.asarray(want)).max() + 1e-6
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=0.02 * scale, rtol=0.05)
+
+
+def test_quant_matmul_grid_tiling_exact():
+    """Tiling must not change results vs a single-tile call."""
+    M, K, N = 256, 512, 256
+    k1, k2 = jax.random.split(jax.random.PRNGKey(1))
+    x = jax.random.normal(k1, (M, K), jnp.float32)
+    w = quantize_q8_0(jax.random.normal(k2, (K, N), jnp.float32))
+    a = quant_matmul(x, w, bm=64, bn=64, bk=128, interpret=True,
+                     out_dtype=jnp.float32)
+    b = quant_matmul(x, w, bm=256, bn=256, bk=512, interpret=True,
+                     out_dtype=jnp.float32)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-5,
+                               atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+CASES = [
+    # B, Hq, Hkv, Sq, Skv, D, window, q_offset
+    (2, 4, 2, 256, 256, 64, 0, 0),
+    (1, 8, 1, 128, 128, 32, 0, 0),       # MQA
+    (2, 4, 4, 256, 256, 64, 64, 0),      # sliding window
+    (1, 2, 1, 128, 256, 64, 0, 128),     # q offset (chunked prefill)
+    (1, 2, 2, 64, 64, 128, 16, 0),       # tiny window
+]
+
+
+@pytest.mark.parametrize("case", CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_allclose(case, dtype):
+    B, Hq, Hkv, Sq, Skv, D, win, off = case
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    q = jax.random.normal(ks[0], (B, Hq, Sq, D), jnp.float32).astype(dtype)
+    k = jax.random.normal(ks[1], (B, Hkv, Skv, D), jnp.float32).astype(dtype)
+    v = jax.random.normal(ks[2], (B, Hkv, Skv, D), jnp.float32).astype(dtype)
+    out = flash_attention(q, k, v, causal=True, window=win, q_offset=off,
+                          bq=64, bk=64, interpret=True)
+    want = ref.attention_ref(q, k, v, causal=True, window=win,
+                             q_offset=off)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), atol=tol)
+
+
+@given(st.integers(0, 2**31), st.sampled_from([32, 64]),
+       st.sampled_from([1, 2, 4]))
+@settings(max_examples=10, deadline=None)
+def test_flash_attention_property(seed, bq, g):
+    """Property: rows attend only within the causal window — permuting
+    *future* keys never changes the output."""
+    B, Hkv, S, D = 1, 2, 128, 32
+    Hq = Hkv * g
+    ks = jax.random.split(jax.random.PRNGKey(seed % (2**31)), 3)
+    q = jax.random.normal(ks[0], (B, Hq, S, D))
+    k = jax.random.normal(ks[1], (B, Hkv, S, D))
+    v = jax.random.normal(ks[2], (B, Hkv, S, D))
+    out = flash_attention(q, k, v, causal=True, bq=bq, bk=bq,
+                          interpret=True)
+    # shuffle keys in the strictly-future half for the first query row
+    row = S // 2 - 1
+    perm = np.arange(S)
+    perm[S // 2:] = perm[S // 2:][::-1]
+    out2 = flash_attention(q, k[:, :, perm], v[:, :, perm], causal=True,
+                           bq=bq, bk=bq, interpret=True)
+    np.testing.assert_allclose(np.asarray(out[:, :, :row + 1]),
+                               np.asarray(out2[:, :, :row + 1]),
+                               atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# decode attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("case", [
+    (2, 8, 2, 256, 64, 0), (3, 4, 4, 512, 32, 0), (2, 8, 1, 256, 64, 128),
+    (1, 16, 2, 128, 128, 0),
+])
+def test_decode_attention_allclose(case):
+    B, Hq, Hkv, S, D, win = case
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    q = jax.random.normal(ks[0], (B, Hq, D))
+    k = jax.random.normal(ks[1], (B, Hkv, S, D))
+    v = jax.random.normal(ks[2], (B, Hkv, S, D))
+    lens = jnp.asarray(([S // 2, S] + [S // 4] * B)[:B], jnp.int32)
+    out = decode_attention(q, k, v, lens, window=win, bk=64,
+                           interpret=True)
+    want = ref.decode_attention_ref(q, k, v, kv_len=lens, window=win)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=2e-5)
+
+
+def test_decode_attention_ignores_stale_cache():
+    """Entries past kv_len must not affect the result."""
+    B, Hq, Hkv, S, D = 2, 4, 2, 256, 64
+    ks = jax.random.split(jax.random.PRNGKey(4), 3)
+    q = jax.random.normal(ks[0], (B, Hq, D))
+    k = jax.random.normal(ks[1], (B, Hkv, S, D))
+    v = jax.random.normal(ks[2], (B, Hkv, S, D))
+    lens = jnp.asarray([100, 17], jnp.int32)
+    out1 = decode_attention(q, k, v, lens, bk=64, interpret=True)
+    k2 = k.at[:, :, 200:].set(1e4)   # poison stale region
+    v2 = v.at[:, :, 200:].set(-1e4)
+    out2 = decode_attention(q, k2, v2, lens, bk=64, interpret=True)
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2))
+
+
+def test_xla_fallback_matches_kernel():
+    """ops.decode_attention's bf16 jnp path == Pallas kernel."""
+    from repro.kernels import ops
+    B, Hq, Hkv, S, D = 2, 8, 2, 128, 64
+    ks = jax.random.split(jax.random.PRNGKey(5), 3)
+    q = jax.random.normal(ks[0], (B, Hq, D), jnp.float32)
+    k = jax.random.normal(ks[1], (B, Hkv, S, D), jnp.float32)
+    v = jax.random.normal(ks[2], (B, Hkv, S, D), jnp.float32)
+    lens = jnp.asarray([64, 128], jnp.int32)
+    a = ops.decode_attention(q, k, v, lens, use_pallas=False)
+    b = ops.decode_attention(q, k, v, lens, use_pallas=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)

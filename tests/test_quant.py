@@ -1,0 +1,72 @@
+"""Quantization: round-trip bounds, packing, effective bits (paper fn.1)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.quant import (
+    dequantize, pack_int4, quantize, quantize_q4_0, quantize_q8_0,
+    quantize_tree, unpack_int4,
+)
+
+
+@pytest.mark.parametrize("shape", [(32, 8), (64, 16), (128, 256), (4, 64, 32)])
+@pytest.mark.parametrize("fmt,tol", [("q8_0", 0.02), ("q4_0", 0.12)])
+def test_roundtrip_error_bound(shape, fmt, tol):
+    w = jax.random.normal(jax.random.PRNGKey(0), shape, jnp.float32)
+    qt = quantize(w, fmt)
+    wd = dequantize(qt, jnp.float32)
+    rel = np.abs(np.asarray(wd - w)).max() / np.abs(np.asarray(w)).max()
+    assert rel < tol
+
+
+def test_effective_bits_match_paper():
+    # paper footnote 1: Q4 is "effective 4.5 bits/weight"
+    w = jnp.ones((128, 64))
+    q4 = quantize_q4_0(w)
+    q8 = quantize_q8_0(w)
+    assert q4.quant_nbytes / q4.logical_nbytes == pytest.approx(4.5 / 16)
+    assert q8.quant_nbytes / q8.logical_nbytes == pytest.approx(8.5 / 16)
+
+
+@given(st.integers(0, 2**32 - 1))
+@settings(max_examples=20, deadline=None)
+def test_pack_unpack_roundtrip(seed):
+    q = jax.random.randint(jax.random.PRNGKey(seed), (32, 8), -8, 8,
+                           jnp.int8)
+    assert (unpack_int4(pack_int4(q)) == q).all()
+
+
+@given(st.integers(0, 2**32 - 1), st.sampled_from(["q8_0", "q4_0"]))
+@settings(max_examples=15, deadline=None)
+def test_scale_invariance(seed, fmt):
+    """Quantization error scales linearly with the tensor (groupwise
+    scales are per-group max-abs): quantize(c*w) == c*quantize(w) for
+    power-of-two c."""
+    w = jax.random.normal(jax.random.PRNGKey(seed), (64, 16))
+    c = 4.0
+    d1 = dequantize(quantize(w, fmt), jnp.float32)
+    d2 = dequantize(quantize(w * c, fmt), jnp.float32)
+    np.testing.assert_allclose(np.asarray(d1) * c, np.asarray(d2),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_quantize_tree_skips_norms_and_embeddings():
+    params = {
+        "embedding": jnp.ones((64, 32)),
+        "layers": {"attn_norm": jnp.ones((32,)),
+                   "wqkv": {"w": jnp.ones((32, 96))}},
+    }
+    qt = quantize_tree(params, "q4_0")
+    assert isinstance(qt["embedding"], jnp.ndarray)
+    assert isinstance(qt["layers"]["attn_norm"], jnp.ndarray)
+    assert not isinstance(qt["layers"]["wqkv"]["w"], jnp.ndarray)
+
+
+def test_quantized_tensor_is_pytree():
+    qt = quantize_q4_0(jnp.ones((64, 16)))
+    leaves = jax.tree_util.tree_leaves(qt)
+    assert len(leaves) == 2
+    out = jax.jit(lambda t: dequantize(t).sum())(qt)
+    assert np.isfinite(float(out))

@@ -1,0 +1,112 @@
+"""Training substrate: optimizer, convergence, accumulation, checkpoint."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.models import Model
+from repro.training import (AdamWConfig, DataConfig, TrainConfig, batches,
+                            checkpoint, init_state, make_train_step,
+                            schedule)
+
+
+@pytest.fixture(scope="module")
+def small():
+    cfg = dataclasses.replace(reduced(get_config("deepseek-7b")),
+                              param_dtype="f32")
+    m = Model(cfg)
+    return cfg, m, m.init(jax.random.PRNGKey(0))
+
+
+def test_schedule_shape():
+    cfg = AdamWConfig(lr=1e-3, warmup_steps=10, total_steps=100)
+    lrs = [float(schedule(cfg, jnp.asarray(s))) for s in
+           (0, 5, 10, 50, 100)]
+    assert lrs[0] < lrs[1] < lrs[2]             # warmup
+    assert lrs[2] == pytest.approx(1e-3, rel=1e-3)
+    assert lrs[3] > lrs[4]                      # cosine decay
+    assert lrs[4] >= 1e-4 * 0.99                # min_lr floor
+
+
+def test_loss_decreases_on_copy_task(small):
+    cfg, m, params = small
+    tcfg = TrainConfig(adamw=AdamWConfig(lr=3e-3, warmup_steps=10,
+                                         total_steps=300,
+                                         weight_decay=0.0))
+    step = jax.jit(make_train_step(m, tcfg))
+    opt = init_state(params)
+    it = batches(DataConfig(vocab_size=cfg.vocab_size, seq_len=32,
+                            global_batch=16, kind="copy"))
+    losses = []
+    for i in range(60):
+        b = next(it)
+        params, opt, metrics = step(
+            params, opt, {k: jnp.asarray(v) for k, v in b.items()})
+        losses.append(float(metrics["loss"]))
+    assert losses[-1] < losses[0] - 0.3, (losses[0], losses[-1])
+    assert all(np.isfinite(losses))
+
+
+def test_grad_accumulation_matches_full_batch(small):
+    cfg, m, params = small
+    acfg = AdamWConfig(lr=1e-3, warmup_steps=0, total_steps=10,
+                       grad_clip=1e9, weight_decay=0.0)
+    step1 = jax.jit(make_train_step(m, TrainConfig(adamw=acfg,
+                                                   microbatches=1)))
+    step4 = jax.jit(make_train_step(m, TrainConfig(adamw=acfg,
+                                                   microbatches=4)))
+    b = next(batches(DataConfig(vocab_size=cfg.vocab_size, seq_len=16,
+                                global_batch=8, kind="copy")))
+    batch = {k: jnp.asarray(v) for k, v in b.items()}
+    opt = init_state(params)
+    p1, _, m1 = step1(params, opt, batch)
+    p4, _, m4 = step4(params, opt, batch)
+    # micro-losses average to the same value; grads differ only through
+    # per-microbatch loss normalization (same masks here) → params close
+    assert float(m1["loss"]) == pytest.approx(float(m4["loss"]), rel=1e-3)
+    l1 = np.asarray(jax.tree_util.tree_leaves(p1)[0], np.float32)
+    l4 = np.asarray(jax.tree_util.tree_leaves(p4)[0], np.float32)
+    np.testing.assert_allclose(l1, l4, atol=5e-4)
+
+
+def test_checkpoint_roundtrip(small, tmp_path):
+    cfg, m, params = small
+    opt = init_state(params)
+    path = str(tmp_path / "ckpt.msgpack")
+    checkpoint.save(path, {"params": params, "opt": opt, "step": 7})
+    back = checkpoint.restore(path)
+    assert back["step"] == 7
+    for a, b in zip(jax.tree_util.tree_leaves(params),
+                    jax.tree_util.tree_leaves(back["params"])):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+    assert isinstance(back["opt"], type(opt))
+
+
+def test_checkpoint_quantized(tmp_path):
+    from repro.quant import quantize_tree
+    cfg = reduced(get_config("deepseek-7b"))
+    m = Model(cfg)
+    params = quantize_tree(m.init(jax.random.PRNGKey(0), quantize=False),
+                           "q4_0")
+    path = str(tmp_path / "q.msgpack")
+    checkpoint.save(path, params)
+    back = checkpoint.restore(path)
+    flat_a = jax.tree_util.tree_leaves(params)
+    flat_b = jax.tree_util.tree_leaves(back)
+    for a, b in zip(flat_a, flat_b):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_lm_data_has_structure():
+    """The synthetic stream must be learnable (bigram successor rule)."""
+    it = batches(DataConfig(vocab_size=128, seq_len=64, global_batch=4,
+                            kind="lm"))
+    b = next(it)
+    assert b["tokens"].shape == (4, 64)
+    assert b["tokens"].max() < 128
+    assert (b["labels"][:, :-1] == b["tokens"][:, 1:]).all()
