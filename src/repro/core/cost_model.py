@@ -33,6 +33,10 @@ class HardwareSpec:
     node_overhead_s: float = 0.0
     # cross-device synchronization cost (paper V3: CPU<->GPU boundary)
     sync_overhead_s: float = 0.0
+    # fixed cost to launch one *whole decode step* from the host
+    # (Python→runtime dispatch + host sync to read the result). This is
+    # the term a K-token megastep amortizes: one launch per K tokens.
+    dispatch_overhead_s: float = 0.0
     mem_efficiency: float = 1.0   # achieved/peak bandwidth
     flop_efficiency: float = 1.0
     # effective rate for non-GEMM elementwise/transcendental ops
@@ -56,6 +60,7 @@ TPU_V5E = HardwareSpec(
     link_bw=50e9,             # per ICI link
     hbm_bytes=16 * 2**30,
     node_overhead_s=0.0,      # XLA fuses; no per-node dispatch cost
+    dispatch_overhead_s=75e-6,  # Python→XLA launch + result sync
     mem_efficiency=1.0,       # roofline terms reported at peak
     flop_efficiency=1.0,
 )
@@ -98,6 +103,7 @@ def a17_cpu(threads: int) -> HardwareSpec:
         peak_flops=flops * degrade,
         mem_bw=bw * degrade,
         node_overhead_s=barrier if threads > 1 else 2e-6,
+        dispatch_overhead_s=30e-6,  # ggml graph_compute launch
         mem_efficiency=0.95,   # sequential weight streaming
         flop_efficiency=0.70,
         ew_flops=A17_EW_FLOPS_PER_THREAD * threads * degrade,
@@ -113,6 +119,7 @@ A17_GPU = HardwareSpec(
     mem_bw=A17_PEAK_BW,
     node_overhead_s=5.0e-5,     # Metal kernel launch + encode
     sync_overhead_s=1.5e-3,     # CPU<->GPU boundary sync (paper V3)
+    dispatch_overhead_s=1.0e-3,  # command-buffer commit + completion
     mem_efficiency=0.72,        # small-GEMV achieved bandwidth
     flop_efficiency=0.80,
     ew_flops=50e9,              # massively parallel elementwise
@@ -195,6 +202,24 @@ def tokens_per_second(step_time_s: float, tokens: int = 1) -> float:
 
 
 # ---------------------------------------------------------------------------
+# Megastep amortization (serving decode: one dispatch per K tokens)
+# ---------------------------------------------------------------------------
+
+def megastep_time(per_token_s: float, hw: HardwareSpec,
+                  k: int = 1) -> float:
+    """Wall time of one K-token serving megastep: one host dispatch +
+    K device-resident decode iterations. The per-token dispatch share
+    ``dispatch_overhead_s / k`` is the lever the paper's §5 CPU-vs-GPU
+    result measures (per-kernel launch cost at batch-1 decode)."""
+    return hw.dispatch_overhead_s + k * per_token_s
+
+
+def megastep_tokens_per_s(per_token_s: float, hw: HardwareSpec,
+                          k: int = 1) -> float:
+    return tokens_per_second(megastep_time(per_token_s, hw, k), k)
+
+
+# ---------------------------------------------------------------------------
 # Roofline terms (deliverable g)
 # ---------------------------------------------------------------------------
 
@@ -207,22 +232,29 @@ class RooflineTerms:
     hlo_bytes: float
     collective_bytes: float
     chips: int
+    # amortized host dispatch per step (dispatch_overhead_s divided by
+    # steps-per-dispatch; 0 unless the caller models the serving loop)
+    dispatch_s: float = 0.0
 
     @property
     def dominant(self) -> str:
         terms = {"compute": self.compute_s, "memory": self.memory_s,
-                 "collective": self.collective_s}
+                 "collective": self.collective_s,
+                 "dispatch": self.dispatch_s}
         return max(terms, key=terms.get)
 
     @property
     def step_s(self) -> float:
-        return max(self.compute_s, self.memory_s, self.collective_s)
+        # dispatch is serial with the overlapped device terms
+        return max(self.compute_s, self.memory_s,
+                   self.collective_s) + self.dispatch_s
 
     def as_dict(self) -> Dict[str, float]:
         return {
             "compute_s": self.compute_s,
             "memory_s": self.memory_s,
             "collective_s": self.collective_s,
+            "dispatch_s": self.dispatch_s,
             "hlo_flops": self.hlo_flops,
             "hlo_bytes": self.hlo_bytes,
             "collective_bytes": self.collective_bytes,
@@ -233,11 +265,15 @@ class RooflineTerms:
 
 def roofline(hlo_flops: float, hlo_bytes: float, collective_bytes: float,
              chips: int, hw: HardwareSpec = TPU_V5E,
-             links_per_chip: int = 1) -> RooflineTerms:
-    """The brief's three terms.
+             links_per_chip: int = 1,
+             steps_per_dispatch: int = 0) -> RooflineTerms:
+    """The brief's three terms, plus an optional dispatch term.
 
     FLOPs/bytes from ``compiled.cost_analysis()`` are *per device* under
     SPMD; collective_bytes are summed per device from the HLO text.
+    ``steps_per_dispatch`` > 0 adds the serving-loop host-launch cost
+    amortized over a K-token megastep (K=1 → the paper's losing
+    per-token-dispatch configuration).
     """
     return RooflineTerms(
         compute_s=hlo_flops / hw.peak_flops,
@@ -247,6 +283,8 @@ def roofline(hlo_flops: float, hlo_bytes: float, collective_bytes: float,
         hlo_bytes=hlo_bytes,
         collective_bytes=collective_bytes,
         chips=chips,
+        dispatch_s=(hw.dispatch_overhead_s / steps_per_dispatch
+                    if steps_per_dispatch else 0.0),
     )
 
 

@@ -47,6 +47,9 @@ class ExecutionPlan:
     fuse_qkv: bool
     fuse_gate_up: bool
     decisions: List[GemmDecision]
+    # decode serving loop: tokens per fused dispatch (1 for prefill /
+    # training shapes — there is no per-token loop to amortize)
+    megastep_k: int = 1
 
     def config_overrides(self) -> Dict:
         """Overrides to apply to the ModelConfig for this plan."""
@@ -66,7 +69,8 @@ class ExecutionPlan:
     def summary(self) -> str:
         lines = [f"plan[{self.arch} x {self.shape} on {self.hardware}] "
                  f"sched={self.scheduler_version} fuse_qkv={self.fuse_qkv} "
-                 f"fuse_gate_up={self.fuse_gate_up}"]
+                 f"fuse_gate_up={self.fuse_gate_up} "
+                 f"megastep_k={self.megastep_k}"]
         for d in self.decisions:
             lines.append(
                 f"  {d.tag:<10} AI={d.arithmetic_intensity:9.1f} "
@@ -110,7 +114,36 @@ def plan(cfg: ModelConfig, shape: InputShape,
     # Fusion: always beneficial on TPU (fewer kernels, bigger GEMMs);
     # on mobile it is the paper's V1. Disabled only for v0 studies.
     version = "v2" if hw.link_bw or hw.name.startswith("tpu") else "v2"
+
+    # Decode serving loop: amortize the host dispatch over K tokens —
+    # the same napkin math as the AI-vs-ridge-point rule above, applied
+    # to the time axis (launch cost vs per-token device time).
+    megastep_k = 1
+    if shape.kind == "decode":
+        step_s = cm.graph_time_wave(g, hw)
+        megastep_k = choose_megastep_k(hw, step_s)
     return ExecutionPlan(
         arch=cfg.name, shape=shape.name, hardware=hw.name,
         scheduler_version=version, fuse_qkv=True,
-        fuse_gate_up=cfg.glu, decisions=decisions)
+        fuse_gate_up=cfg.glu, decisions=decisions,
+        megastep_k=megastep_k)
+
+
+def choose_megastep_k(hw: cm.HardwareSpec, step_s: float, *,
+                      max_k: int = 32,
+                      dispatch_budget: float = 0.1) -> int:
+    """Smallest power-of-two K whose amortized per-token dispatch cost
+    is ≤ ``dispatch_budget`` of the per-token device time.
+
+    K=1 reproduces the paper's losing per-token-dispatch configuration
+    (§5: the Apple GPU's 12.8 tok/s vs CPU 17); growing K trades
+    retirement granularity (a finished slot idles ≤ K-1 substeps) for
+    amortization, so K stops as soon as dispatch stops mattering.
+    """
+    if hw.dispatch_overhead_s <= 0.0 or step_s <= 0.0:
+        return 1
+    k = 1
+    while k < max_k and hw.dispatch_overhead_s / k > \
+            dispatch_budget * step_s:
+        k *= 2
+    return k

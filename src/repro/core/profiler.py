@@ -53,14 +53,36 @@ def profile_graph(g: Graph, hw: cm.HardwareSpec, phase: str) -> ProfileReport:
 def profile_phases(cfg: ModelConfig, *, threads: int = 2,
                    prompt_len: int = 128, gen_kv: int = 128,
                    weight_format: str = "f16",
+                   megastep_k: int = 0,
                    ) -> Dict[str, ProfileReport]:
-    """Prefill + decode profiles (the paper's Fig 5a/5b setup)."""
+    """Prefill + decode profiles (the paper's Fig 5a/5b setup).
+
+    ``megastep_k`` > 0 attributes the serving loop's per-step host
+    dispatch cost (amortized over a K-token megastep) to a DISPATCH
+    pseudo-op in the decode report, so the §6-style breakdown can show
+    *why* K=1 per-token dispatch loses — the same mechanism behind the
+    paper's §5 GPU-launch-overhead result. 0 keeps the paper figures
+    device-time-only.
+    """
     hw = cm.a17_cpu(threads)
     prefill = build_decoder_graph(cfg, seq=prompt_len, kv_len=0,
                                   weight_format=weight_format, fused=False)
     decode = build_decoder_graph(cfg, seq=1, kv_len=gen_kv,
                                  weight_format=weight_format, fused=False)
-    return {
+    reports = {
         "prefill": profile_graph(prefill, hw, "prefill"),
         "decode": profile_graph(decode, hw, "decode"),
     }
+    if megastep_k > 0:
+        reports["decode"] = with_dispatch(reports["decode"], hw,
+                                          megastep_k)
+    return reports
+
+
+def with_dispatch(rep: ProfileReport, hw: cm.HardwareSpec,
+                  megastep_k: int) -> ProfileReport:
+    """Add the amortized host-dispatch share as a DISPATCH pseudo-op."""
+    disp = hw.dispatch_overhead_s / max(megastep_k, 1)
+    by_op = dict(rep.by_op, DISPATCH=rep.by_op.get("DISPATCH", 0.0) + disp)
+    return ProfileReport(f"{rep.phase}_megastep_k{megastep_k}",
+                         rep.total_s + disp, by_op, rep.by_matmul_tag)

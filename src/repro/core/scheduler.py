@@ -84,7 +84,8 @@ class VersionResult:
 def simulate_version(cfg: ModelConfig, version: str, *,
                      threads: int = 4, seq: int = 1, kv_len: int = 64,
                      weight_format: str = "f16",
-                     batch: int = 1) -> VersionResult:
+                     batch: int = 1,
+                     megastep_k: Optional[int] = None) -> VersionResult:
     """Predict decode throughput for paper versions V0-V3 on the A17.
 
     - v0: serial schedule, unfused GEMMs (paper baseline, 11.5 tk/s)
@@ -94,6 +95,11 @@ def simulate_version(cfg: ModelConfig, version: str, *,
           memory traffic now streams at full multi-core bandwidth (15)
     - v3: v2 but FFN block offloaded to the GPU — every block boundary
           pays a Metal sync (6 tk/s)
+
+    ``megastep_k`` (when set) additionally charges the per-step host
+    dispatch cost amortized over a K-token megastep — the same
+    dispatch-overhead term that decides the paper's §5 CPU-vs-GPU
+    result. ``None`` keeps the paper-calibrated ladder untouched.
     """
     cpu = cm.a17_cpu(threads)
     fused = version in ("v2", "v3")
@@ -129,8 +135,40 @@ def simulate_version(cfg: ModelConfig, version: str, *,
         detail = "CPU attention + GPU FFN, per-block Metal sync"
     else:
         raise ValueError(version)
+    if megastep_k:
+        hw_disp = cm.A17_GPU if version == "v3" else cpu
+        t = t + hw_disp.dispatch_overhead_s / megastep_k
+        detail += f" + dispatch/{megastep_k}"
     return VersionResult(version, t, cm.tokens_per_second(t, seq * batch),
                          len(g.nodes), detail)
+
+
+def simulate_megastep(cfg: ModelConfig,
+                      hw: Optional[cm.HardwareSpec] = None, *,
+                      threads: int = 4, kv_len: int = 64,
+                      weight_format: str = "f16", batch: int = 1,
+                      ks: Sequence[int] = (1, 4, 8, 16),
+                      ) -> Dict[int, VersionResult]:
+    """Predict serving-loop tok/s as a function of megastep K.
+
+    Per-token device time comes from the v2 (fused wave) schedule; each
+    megastep then pays ``hw.dispatch_overhead_s`` once per K tokens —
+    the analytic twin of ``benchmarks/serving_bench.py``'s sweep, and
+    the napkin math ``core.dispatch.plan`` uses to choose K.
+    """
+    hw = hw or cm.a17_cpu(threads)
+    g = build_decoder_graph(cfg, seq=1, kv_len=kv_len, batch=batch,
+                            weight_format=weight_format, fused=True)
+    per_tok = cm.graph_time_wave(g, hw, overlap_efficiency=0.92)
+    out = {}
+    for k in ks:
+        t = cm.megastep_time(per_tok, hw, k)
+        out[k] = VersionResult(
+            f"megastep_k{k}", t / k, cm.tokens_per_second(t, k * batch),
+            len(g.nodes),
+            f"1 dispatch / {k} tok; per-token device {per_tok*1e6:.0f}us "
+            f"+ dispatch {hw.dispatch_overhead_s/k*1e6:.0f}us")
+    return out
 
 
 def backend_throughput(cfg: ModelConfig, backend: str, *,

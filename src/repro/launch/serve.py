@@ -30,6 +30,9 @@ def main() -> None:
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-len", type=int, default=256)
+    ap.add_argument("--megastep-k", type=int, default=None,
+                    help="decode tokens per fused dispatch "
+                         "(default: engine's DEFAULT_MEGASTEP_K)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -44,7 +47,8 @@ def main() -> None:
     engine = ServingEngine(model, params, slots=args.slots,
                            max_len=args.max_len,
                            sampling=SamplingConfig(temperature=0.8,
-                                                   top_k=40))
+                                                   top_k=40),
+                           megastep_k=args.megastep_k)
     rng = np.random.default_rng(0)
     reqs = [Request(uid=i,
                     prompt=rng.integers(
@@ -59,7 +63,10 @@ def main() -> None:
     print(f"arch={cfg.name} precision={args.precision}: "
           f"{engine.stats.tokens_generated} tokens / {dt:.1f}s = "
           f"{engine.stats.tokens_generated / dt:.1f} tok/s "
-          f"({engine.stats.steps} steps, {engine.stats.prefills} prefills)")
+          f"({engine.stats.steps} decode steps in "
+          f"{engine.stats.megasteps} dispatches [K={engine.megastep_k}], "
+          f"{engine.stats.prefills} prefills in "
+          f"{engine.stats.prefill_batches} batches)")
 
 
 if __name__ == "__main__":

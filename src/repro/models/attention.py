@@ -231,11 +231,17 @@ def attention_decode(p, cfg: ModelConfig, x: jax.Array, cache: Dict, *,
     S_cache = cache["k"].shape[2]
     pos = lens                                    # new token's position
     if use_rope:
+        # pin the rope operands before the cos/sin broadcast-mul: on big
+        # fake-device meshes GSPMD otherwise picks a degenerate sharding
+        # for the broadcast (model axis onto the hd/2 dim) and dies with
+        # an involuntary-full-rematerialization error
+        q = constrain(q, ("batch", "heads", None))
+        k = constrain(k.reshape(B, Hkv, hd), ("batch", None, None))
         # q (B,H,hd) → (B,1,H,hd) with positions (B,1)
         q = layers.apply_rope(q[:, None], pos[:, None],
                               cfg.rope_theta)[:, 0]
-        k = layers.apply_rope(k.reshape(B, 1, Hkv, hd), pos[:, None],
-                              cfg.rope_theta).reshape(B, Hkv, hd)
+        k = layers.apply_rope(k[:, None], pos[:, None],
+                              cfg.rope_theta)[:, 0]
     else:
         k = k.reshape(B, Hkv, hd)
     v = v.reshape(B, Hkv, hd)

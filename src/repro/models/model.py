@@ -357,9 +357,21 @@ class Model:
 
     # -- prefill -----------------------------------------------------------------
     def prefill(self, params, batch: Dict, cache):
-        """Run the prompt, fill the cache, return last-token logits."""
+        """Run the prompt, fill the cache, return last-token logits.
+
+        Optional ``batch["seq_lens"]`` (B,) marks per-sequence true
+        lengths: tokens beyond ``seq_lens[i]`` are right-padding, so the
+        engine can prefill several length-bucketed prompts in ONE
+        dispatch. Padding rows write junk K/V past ``lens`` — harmless,
+        because decode reads only ``kv_len = lens+1`` rows and
+        overwrites the junk in order before it ever becomes visible.
+        Recurrent archs (ssm/hybrid) carry state through every position,
+        so callers must not pad them (the engine buckets those by exact
+        length, making ``seq_lens`` uniform).
+        """
         cfg = self.cfg
         tokens = batch["tokens"]
+        seq_lens = batch.get("seq_lens")
         B, S = tokens.shape
         x = layers.embed(params, tokens)
         prefix_len = 0
@@ -371,6 +383,8 @@ class Model:
         window = self.window_for(total)
 
         new_cache = dict(cache)
+        # effective per-sequence cache length incl. any VLM prefix
+        eff_lens = None if seq_lens is None else seq_lens + prefix_len
         enc_out = None
         if cfg.arch_type == "audio":
             enc_out = self._encode(params, batch["frames"])
@@ -421,7 +435,8 @@ class Model:
                     p_l["attn"], cfg, z, positions=positions,
                     window=window, return_kv=True)
                 h = h + z
-                c_new = _write_prefill_kv(c_l, k, v, total)
+                c_new = _write_prefill_kv(c_l, k, v, total,
+                                          seq_lens=eff_lens)
                 if "cross" in p_l:
                     z = layers.rmsnorm(h, p_l["cross_norm"], cfg.norm_eps)
                     kc, vc = self._cross_kv(p_l["cross"], enc_out)
@@ -444,7 +459,12 @@ class Model:
             new_cache["layers"] = stacked
 
         x = layers.rmsnorm(x, params["final_norm"], cfg.norm_eps)
-        last = x[:, -1:]
+        if eff_lens is None:
+            last = x[:, -1:]
+        else:
+            # per-sequence last real position (right-padded batch)
+            last = jnp.take_along_axis(
+                x, (eff_lens - 1)[:, None, None], axis=1)
         logits = layers.unembed(params, last, cfg)[:, 0]
         return logits[:, :cfg.vocab_size], new_cache
 
@@ -466,8 +486,15 @@ class Model:
         return constrain(x, ("batch", "seq", "act_embed")), c_new
 
     # -- decode ------------------------------------------------------------------
-    def decode_step(self, params, tokens, cache):
-        """tokens: (B, 1) → (logits (B, vocab), new_cache)."""
+    def decode_step(self, params, tokens, cache, advance_mask=None):
+        """tokens: (B, 1) → (logits (B, vocab), new_cache).
+
+        ``advance_mask`` (B,) bool — rows where it is False keep their
+        cache frozen (no K/V write, no ``lens`` advance, no state
+        update). The serving megastep uses this so retired (EOS /
+        length-capped) slots can keep riding the fixed-shape batch
+        through a ``lax.scan`` without corrupting their cache.
+        """
         cfg = self.cfg
         B = tokens.shape[0]
         x = layers.embed(params, tokens)
@@ -480,7 +507,7 @@ class Model:
                 p_l, c_l = xs
                 z = layers.rmsnorm(h, p_l["norm"], cfg.norm_eps)
                 z, c_new = ssm_mod.ssm_decode(p_l["ssm"], cfg, z, c_l)
-                return h + z, c_new
+                return h + z, _freeze_rows(c_new, c_l, advance_mask)
             x, stacked = _layer_scan(body, x,
                                      (params["layers"], cache["layers"]),
                                      cfg.unroll_scans)
@@ -498,7 +525,7 @@ class Model:
                 x = x + h
                 h = layers.rmsnorm(x, p_l["ffn_norm"], cfg.norm_eps)
                 x = x + mlp_mod.mlp_forward(p_l["mlp"], cfg, h)
-                new_layers.append(c_new)
+                new_layers.append(_freeze_rows(c_new, c_l, advance_mask))
             new_cache["layers"] = new_layers
         else:
             cross = cfg.arch_type == "audio"
@@ -511,6 +538,7 @@ class Model:
                     p_l, c_l = xs
                 z = layers.rmsnorm(h, p_l["attn_norm"], cfg.norm_eps)
                 z, c_new = attn.attention_decode(p_l["attn"], cfg, z, c_l)
+                c_new = _freeze_rows(c_new, c_l, advance_mask)
                 h = h + z
                 if cross:
                     z = layers.rmsnorm(h, p_l["cross_norm"], cfg.norm_eps)
@@ -544,6 +572,19 @@ class Model:
 
 def _stack_pytrees(trees):
     return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def _freeze_rows(c_new, c_old, mask):
+    """Length-frozen cache write mask: batch rows where ``mask`` is
+    False keep ``c_old``. Every per-layer cache leaf (k/v/lens, SSM
+    conv/state, RG-LRU conv/state) carries batch on axis 0, so one
+    broadcast select covers all families."""
+    if mask is None:
+        return c_new
+    def sel(n, o):
+        m = mask.reshape((mask.shape[0],) + (1,) * (n.ndim - 1))
+        return jnp.where(m, n, o)
+    return jax.tree_util.tree_map(sel, c_new, c_old)
 
 
 def _prepend_prefix(prefix, x):
@@ -580,8 +621,13 @@ def _layer_scan(body, carry, xs, unroll: bool):
     return carry, stacked
 
 
-def _write_prefill_kv(c_l, k, v, total_len: int):
-    """Write prefill K/V (B, Hkv, S, hd) into the cache (ring-aware)."""
+def _write_prefill_kv(c_l, k, v, total_len: int, seq_lens=None):
+    """Write prefill K/V (B, Hkv, S, hd) into the cache (ring-aware).
+
+    ``seq_lens`` (B,) — per-sequence true lengths for right-padded
+    batches; only valid on the non-ring path (padded prompts never
+    exceed the cache window; the engine guarantees this).
+    """
     S_cache = c_l["k"].shape[2]
     S = k.shape[2]
     if S <= S_cache:
@@ -596,8 +642,9 @@ def _write_prefill_kv(c_l, k, v, total_len: int):
         shift = total_len % S_cache
         new_k = jnp.roll(kw, shift, axis=2).astype(c_l["k"].dtype)
         new_v = jnp.roll(vw, shift, axis=2).astype(c_l["v"].dtype)
-    return dict(c_l, k=new_k, v=new_v,
-                lens=c_l["lens"] + total_len)
+        seq_lens = None        # ring path is uniform-length by contract
+    adv = total_len if seq_lens is None else seq_lens
+    return dict(c_l, k=new_k, v=new_v, lens=c_l["lens"] + adv)
 
 
 # ---------------------------------------------------------------------------

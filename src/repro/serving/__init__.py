@@ -1,5 +1,6 @@
-from repro.serving.engine import ServingEngine, Request, EngineStats
+from repro.serving.engine import (
+    DEFAULT_MEGASTEP_K, EngineStats, Request, ServingEngine, SlotState)
 from repro.serving.sampler import SamplingConfig, sample
 
-__all__ = ["ServingEngine", "Request", "EngineStats", "SamplingConfig",
-           "sample"]
+__all__ = ["ServingEngine", "Request", "EngineStats", "SlotState",
+           "SamplingConfig", "sample", "DEFAULT_MEGASTEP_K"]

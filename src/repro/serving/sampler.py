@@ -1,8 +1,21 @@
-"""Token sampling: greedy / temperature / top-k / top-p."""
+"""Token sampling: greedy / temperature / top-k / top-p.
+
+Fully jittable: ``sample`` is pure jnp over a static ``SamplingConfig``
+so the serving engine can fuse it into the decode dispatch (logits
+never leave the device — the paper's C3/C4 dispatch-overhead lesson).
+
+Contract: logits ``(B, V)`` → tokens ``(B,)`` everywhere (prefill and
+decode use the same call; no reshape contortions at call sites).
+
+Stochastic draws fold the batch-row index into the step key, so each
+row draws from its own stream regardless of batch width or of which
+other rows happen to be active that step. (In the decode megastep the
+row IS the slot; in batched prefill it is the position within the
+length bucket, so stochastic first tokens depend on bucket grouping.)
+"""
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -17,7 +30,7 @@ class SamplingConfig:
 
 def sample(logits: jax.Array, rng: jax.Array,
            cfg: SamplingConfig) -> jax.Array:
-    """logits: (B, V) → tokens (B,)."""
+    """logits: (B, V) → tokens (B,). Pure/jittable (cfg is static)."""
     if cfg.temperature <= 0.0:
         return jnp.argmax(logits, axis=-1).astype(jnp.int32)
     logits = logits.astype(jnp.float32) / cfg.temperature
@@ -31,4 +44,8 @@ def sample(logits: jax.Array, rng: jax.Array,
         cutoff_idx = jnp.sum(cum < cfg.top_p, axis=-1)
         cutoff = jnp.take_along_axis(sorted_logits, cutoff_idx[:, None], 1)
         logits = jnp.where(logits < cutoff, -jnp.inf, logits)
-    return jax.random.categorical(rng, logits, axis=-1).astype(jnp.int32)
+    B = logits.shape[0]
+    keys = jax.vmap(lambda i: jax.random.fold_in(rng, i))(jnp.arange(B))
+    return jax.vmap(
+        lambda l, k: jax.random.categorical(k, l, axis=-1)
+    )(logits, keys).astype(jnp.int32)

@@ -1,0 +1,33 @@
+"""Gate for the optional ``hypothesis`` dependency.
+
+The container may not ship hypothesis; property-based tests then skip
+individually while the example-based tests in the same module still
+run (a bare ``import hypothesis`` at module top would error the whole
+collection instead).
+"""
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                     # pragma: no cover
+    import pytest
+
+    def given(*_args, **_kwargs):
+        def deco(fn):
+            # zero-arg wrapper: the original signature only names
+            # hypothesis-generated params, which pytest would otherwise
+            # try to resolve as fixtures
+            def wrapper():
+                pytest.skip("hypothesis not installed")
+            wrapper.__name__ = getattr(fn, "__name__", "property_test")
+            return wrapper
+        return deco
+
+    def settings(*_args, **_kwargs):
+        return lambda fn: fn
+
+    class _AnyStrategy:
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _AnyStrategy()
+
+__all__ = ["given", "settings", "st"]

@@ -81,6 +81,98 @@ def test_engine_eos_stops_early(engine_setup):
     assert req.done and len(req.output) == 1
 
 
+def test_megastep_equivalence_greedy(engine_setup):
+    """Megastep K=8 must be token-identical to K=1 greedy decode —
+    including mid-block retirement (max_new=11 is not a multiple of 8)
+    and slot refill (3 requests share 2 slots)."""
+    cfg, m, params = engine_setup
+    outs = {}
+    for k in (1, 8):
+        eng = ServingEngine(m, params, slots=2, max_len=64, megastep_k=k,
+                            megastep_unroll=(k == 8))
+        reqs = [Request(uid=i,
+                        prompt=np.arange(4, dtype=np.int32) + i + 1,
+                        max_new_tokens=11) for i in range(3)]
+        for r in reqs:
+            eng.submit(r)
+        eng.run()
+        assert all(r.done for r in reqs)
+        outs[k] = [r.output for r in reqs]
+    assert outs[1] == outs[8]
+    # K=8 used ~8x fewer dispatches for the same tokens
+    assert eng.stats.megasteps < eng.stats.steps
+
+
+def test_megastep_eos_mid_block(engine_setup):
+    """EOS inside a K=8 block stops the slot exactly there (the frozen
+    write mask keeps the cache uncorrupted for the remaining substeps)."""
+    cfg, m, params = engine_setup
+    prompt = np.asarray([1, 2, 3], np.int32)
+    probe = Request(uid=0, prompt=prompt, max_new_tokens=6)
+    eng = ServingEngine(m, params, slots=1, max_len=64, megastep_k=1)
+    eng.submit(probe)
+    eng.run()
+    eos = probe.output[1]                 # stops mid-first-block
+    i = probe.output.index(eos)
+
+    eng2 = ServingEngine(m, params, slots=1, max_len=64, megastep_k=8)
+    req = Request(uid=1, prompt=prompt, max_new_tokens=50, eos_id=eos)
+    eng2.submit(req)
+    eng2.run()
+    assert req.done
+    assert req.output == probe.output[:i + 1]
+
+
+def test_megastep_max_new_mid_block(engine_setup):
+    """max_new_tokens hit inside a K=8 block retires the slot there,
+    and the freed slot is refilled for the next queued request."""
+    cfg, m, params = engine_setup
+    ref = {}
+    for k in (1, 8):
+        eng = ServingEngine(m, params, slots=1, max_len=64, megastep_k=k)
+        reqs = [Request(uid=i,
+                        prompt=np.asarray([2, 7, 1, 8], np.int32),
+                        max_new_tokens=5) for i in range(2)]
+        for r in reqs:
+            eng.submit(r)
+        eng.run()
+        assert all(r.done and len(r.output) == 5 for r in reqs)
+        ref[k] = [r.output for r in reqs]
+    assert ref[1] == ref[8]
+
+
+def test_batched_prefill_one_dispatch(engine_setup):
+    """Prompts landing in the same length bucket prefill several slots
+    per jitted dispatch (prefill_batches < prefills)."""
+    cfg, m, params = engine_setup
+    eng = ServingEngine(m, params, slots=4, max_len=64)
+    for i in range(4):   # lengths 5..8 → all in the pow2-8 bucket
+        eng.submit(Request(uid=i,
+                           prompt=np.arange(5 + i, dtype=np.int32) + 1,
+                           max_new_tokens=4))
+    eng.run()
+    assert eng.stats.prefills == 4
+    assert eng.stats.prefill_batches == 1
+
+
+def test_planner_picks_megastep_k():
+    """Dispatch-overhead napkin math: K grows as the device step
+    shrinks relative to the launch cost, and the analytic serving
+    model predicts the amortization win."""
+    from repro.core import (a17_cpu, choose_megastep_k, simulate_megastep)
+    hw = a17_cpu(2)
+    assert choose_megastep_k(hw, step_s=1.0) == 1       # step ≫ dispatch
+    assert choose_megastep_k(hw, step_s=1e-5) > 1       # dispatch-bound
+    assert choose_megastep_k(hw, step_s=0.0) == 1
+    ks = (1, 4, 8, 16)
+    from repro.configs.paper_models import PAPER_MODELS
+    import dataclasses as dc
+    fast = dc.replace(hw, dispatch_overhead_s=5e-3)     # dispatch-bound
+    r = simulate_megastep(PAPER_MODELS["llama3.2-1b"], fast, ks=ks)
+    tps = [r[k].tokens_per_s for k in ks]
+    assert tps == sorted(tps) and tps[-1] > tps[0]
+
+
 def test_sliding_window_archs_serve(engine_setup):
     """Hybrid (window) and ssm archs run the engine end-to-end."""
     for arch in ("recurrentgemma-2b", "mamba2-2.7b"):
