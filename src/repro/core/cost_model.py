@@ -205,18 +205,58 @@ def tokens_per_second(step_time_s: float, tokens: int = 1) -> float:
 # Megastep amortization (serving decode: one dispatch per K tokens)
 # ---------------------------------------------------------------------------
 
-def megastep_time(per_token_s: float, hw: HardwareSpec,
-                  k: int = 1) -> float:
+def decode_carry_bytes(cfg, batch: int, kv_len: int,
+                       dtype_bytes: int = 2) -> float:
+    """Bytes of the decode carry (per-request cache state) the serving
+    megastep threads across its dispatch boundary: KV rings for
+    attention layers, conv+state for SSM/RG-LRU layers. This is the
+    traffic buffer donation halves (see ``megastep_time``)."""
+    L, B = cfg.num_layers, batch
+    if cfg.arch_type == "ssm":
+        conv = (cfg.ssm_conv - 1) * (cfg.d_inner + 2 * cfg.ssm_state) \
+            * dtype_bytes
+        state = cfg.ssm_heads * cfg.ssm_head_dim * cfg.ssm_state * 4
+        return float(L * B * (conv + state))
+    if cfg.arch_type == "hybrid":
+        w = cfg.rglru_width or cfg.d_model
+        rglru = 3 * w * dtype_bytes + w * 4
+        kv = 2 * cfg.num_kv_heads * cfg.head_dim * \
+            min(kv_len, cfg.local_attn_window) * dtype_bytes
+        pattern = cfg.layer_pattern()
+        n_rglru = sum(1 for k in pattern if k == "rglru")
+        return float(B * (n_rglru * rglru + (L - n_rglru) * kv))
+    win = cfg.sliding_window or 0
+    eff = min(kv_len, win) if win else kv_len
+    return float(L * B * 2 * cfg.num_kv_heads * cfg.head_dim * eff
+                 * dtype_bytes)
+
+
+def megastep_time(per_token_s: float, hw: HardwareSpec, k: int = 1, *,
+                  carry_bytes: float = 0.0,
+                  donate_carries: bool = True) -> float:
     """Wall time of one K-token serving megastep: one host dispatch +
     K device-resident decode iterations. The per-token dispatch share
     ``dispatch_overhead_s / k`` is the lever the paper's §5 CPU-vs-GPU
-    result measures (per-kernel launch cost at batch-1 decode)."""
-    return hw.dispatch_overhead_s + k * per_token_s
+    result measures (per-kernel launch cost at batch-1 decode).
+
+    ``carry_bytes`` models the cache/SlotState carry crossing the
+    dispatch boundary: without buffer donation the runtime materializes
+    the updated carry into fresh buffers (one extra full write per
+    dispatch); with ``donate_carries`` the update is in place and the
+    boundary term vanishes — halving the carry's HBM traffic, which is
+    why the serving engine donates (``jit(..., donate_argnums)``).
+    """
+    boundary = 0.0 if donate_carries else \
+        carry_bytes / (hw.mem_bw * hw.mem_efficiency)
+    return hw.dispatch_overhead_s + boundary + k * per_token_s
 
 
 def megastep_tokens_per_s(per_token_s: float, hw: HardwareSpec,
-                          k: int = 1) -> float:
-    return tokens_per_second(megastep_time(per_token_s, hw, k), k)
+                          k: int = 1, *, carry_bytes: float = 0.0,
+                          donate_carries: bool = True) -> float:
+    return tokens_per_second(
+        megastep_time(per_token_s, hw, k, carry_bytes=carry_bytes,
+                      donate_carries=donate_carries), k)
 
 
 # ---------------------------------------------------------------------------

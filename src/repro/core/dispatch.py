@@ -50,6 +50,15 @@ class ExecutionPlan:
     # decode serving loop: tokens per fused dispatch (1 for prefill /
     # training shapes — there is no per-token loop to amortize)
     megastep_k: int = 1
+    # serving admission mode: "chunked" rides prompts inside the
+    # megastep scan (zero extra dispatches), "stall" runs batched
+    # prefill dispatches between megasteps (wins when per-prompt
+    # compute dwarfs the dispatch/stall cost, e.g. very long prompts)
+    admission: str = "chunked"
+    # donate cache+SlotState pytrees into the megastep
+    # (jit donate_argnums): in-place carry update, ~half the carry's
+    # HBM traffic at each dispatch boundary
+    donate_carries: bool = True
 
     def config_overrides(self) -> Dict:
         """Overrides to apply to the ModelConfig for this plan."""
@@ -70,7 +79,9 @@ class ExecutionPlan:
         lines = [f"plan[{self.arch} x {self.shape} on {self.hardware}] "
                  f"sched={self.scheduler_version} fuse_qkv={self.fuse_qkv} "
                  f"fuse_gate_up={self.fuse_gate_up} "
-                 f"megastep_k={self.megastep_k}"]
+                 f"megastep_k={self.megastep_k} "
+                 f"admission={self.admission} "
+                 f"donate={self.donate_carries}"]
         for d in self.decisions:
             lines.append(
                 f"  {d.tag:<10} AI={d.arithmetic_intensity:9.1f} "
@@ -82,8 +93,17 @@ class ExecutionPlan:
 def plan(cfg: ModelConfig, shape: InputShape,
          hw: cm.HardwareSpec = cm.TPU_V5E, *,
          allow_quant: bool = True,
-         quality_floor_bits: float = 4.5) -> ExecutionPlan:
-    """Derive the execution plan for (arch, input shape, hardware)."""
+         quality_floor_bits: float = 4.5,
+         arrival_rate_per_s: float = 0.0,
+         avg_prompt_len: int = 0,
+         max_new: int = 32) -> ExecutionPlan:
+    """Derive the execution plan for (arch, input shape, hardware).
+
+    ``arrival_rate_per_s`` / ``avg_prompt_len`` / ``max_new`` describe
+    the serving traffic mix (decode shapes only): they bound the
+    megastep K by admission latency and pick the admission mode
+    (chunked vs stall prefill) via ``scheduler.simulate_admission``.
+    """
     tokens = shape.global_batch * (1 if shape.kind == "decode"
                                    else shape.seq_len)
     ridge = hw.ridge_flops_per_byte
@@ -119,19 +139,34 @@ def plan(cfg: ModelConfig, shape: InputShape,
     # the same napkin math as the AI-vs-ridge-point rule above, applied
     # to the time axis (launch cost vs per-token device time).
     megastep_k = 1
+    admission = "chunked"
     if shape.kind == "decode":
         step_s = cm.graph_time_wave(g, hw)
-        megastep_k = choose_megastep_k(hw, step_s)
+        megastep_k = choose_megastep_k(hw, step_s,
+                                       arrival_rate_per_s=arrival_rate_per_s)
+        # Admission mode under mixed prefill/decode load: ride the
+        # prompt in-scan unless its one-token-per-substep cost exceeds
+        # the dispatch+stall cost of a dedicated prefill (long prompts
+        # on compute-rich hardware).
+        from repro.core.scheduler import simulate_admission
+        adm = simulate_admission(
+            cfg, hw, k=megastep_k, batch=max(shape.global_batch, 1),
+            prompt_len=avg_prompt_len or max(shape.seq_len, 1),
+            max_new=max_new, kv_len=max(shape.seq_len, 1))
+        if adm["stall"].tokens_per_s > adm["chunked"].tokens_per_s:
+            admission = "stall"
     return ExecutionPlan(
         arch=cfg.name, shape=shape.name, hardware=hw.name,
         scheduler_version=version, fuse_qkv=True,
         fuse_gate_up=cfg.glu, decisions=decisions,
-        megastep_k=megastep_k)
+        megastep_k=megastep_k, admission=admission,
+        donate_carries=True)
 
 
 def choose_megastep_k(hw: cm.HardwareSpec, step_s: float, *,
                       max_k: int = 32,
-                      dispatch_budget: float = 0.1) -> int:
+                      dispatch_budget: float = 0.1,
+                      arrival_rate_per_s: float = 0.0) -> int:
     """Smallest power-of-two K whose amortized per-token dispatch cost
     is ≤ ``dispatch_budget`` of the per-token device time.
 
@@ -139,6 +174,12 @@ def choose_megastep_k(hw: cm.HardwareSpec, step_s: float, *,
     (§5: the Apple GPU's 12.8 tok/s vs CPU 17); growing K trades
     retirement granularity (a finished slot idles ≤ K-1 substeps) for
     amortization, so K stops as soon as dispatch stops mattering.
+
+    Under mixed load (``arrival_rate_per_s`` > 0), admission happens
+    only at megastep boundaries, so K is additionally capped to keep
+    the megastep wall within one mean inter-arrival gap — a longer
+    megastep would queue arrivals behind the scan for no amortization
+    gain.
     """
     if hw.dispatch_overhead_s <= 0.0 or step_s <= 0.0:
         return 1
@@ -146,4 +187,8 @@ def choose_megastep_k(hw: cm.HardwareSpec, step_s: float, *,
     while k < max_k and hw.dispatch_overhead_s / k > \
             dispatch_budget * step_s:
         k *= 2
+    if arrival_rate_per_s > 0.0:
+        gap = 1.0 / arrival_rate_per_s
+        while k > 1 and hw.dispatch_overhead_s + k * step_s > gap:
+            k //= 2
     return k

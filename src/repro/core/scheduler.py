@@ -148,6 +148,8 @@ def simulate_megastep(cfg: ModelConfig,
                       threads: int = 4, kv_len: int = 64,
                       weight_format: str = "f16", batch: int = 1,
                       ks: Sequence[int] = (1, 4, 8, 16),
+                      donate_carries: bool = True,
+                      prefill_share: float = 0.0,
                       ) -> Dict[int, VersionResult]:
     """Predict serving-loop tok/s as a function of megastep K.
 
@@ -155,20 +157,95 @@ def simulate_megastep(cfg: ModelConfig,
     megastep then pays ``hw.dispatch_overhead_s`` once per K tokens —
     the analytic twin of ``benchmarks/serving_bench.py``'s sweep, and
     the napkin math ``core.dispatch.plan`` uses to choose K.
+
+    ``donate_carries=False`` charges the un-donated carry boundary
+    (one extra cache-sized write per dispatch — what the engine's
+    ``donate_argnums`` removes). ``prefill_share`` models mixed load
+    under chunked admission: that fraction of slot-substeps carries
+    prompt tokens instead of emitting decode tokens, so reported
+    tok/s scales by ``1 - prefill_share`` (the riders themselves add
+    no time — same scan, same shapes).
     """
     hw = hw or cm.a17_cpu(threads)
     g = build_decoder_graph(cfg, seq=1, kv_len=kv_len, batch=batch,
                             weight_format=weight_format, fused=True)
     per_tok = cm.graph_time_wave(g, hw, overlap_efficiency=0.92)
+    carry = cm.decode_carry_bytes(cfg, batch, kv_len)
     out = {}
     for k in ks:
-        t = cm.megastep_time(per_tok, hw, k)
+        t = cm.megastep_time(per_tok, hw, k, carry_bytes=carry,
+                             donate_carries=donate_carries)
+        dec_tokens = k * batch * (1.0 - prefill_share)
         out[k] = VersionResult(
-            f"megastep_k{k}", t / k, cm.tokens_per_second(t, k * batch),
+            f"megastep_k{k}", t / k, cm.tokens_per_second(t, 1)
+            * dec_tokens,
             len(g.nodes),
             f"1 dispatch / {k} tok; per-token device {per_tok*1e6:.0f}us "
-            f"+ dispatch {hw.dispatch_overhead_s/k*1e6:.0f}us")
+            f"+ dispatch {hw.dispatch_overhead_s/k*1e6:.0f}us"
+            + ("" if donate_carries else
+               f" + carry copy {carry/ (hw.mem_bw*hw.mem_efficiency)/k*1e6:.0f}us"))
     return out
+
+
+def simulate_admission(cfg: ModelConfig,
+                       hw: Optional[cm.HardwareSpec] = None, *,
+                       threads: int = 4, k: int = 8, batch: int = 4,
+                       prompt_len: int = 32, max_new: int = 32,
+                       kv_len: int = 64, weight_format: str = "f16",
+                       prefill_bucket: float = 1.0,
+                       donate_carries: bool = True,
+                       ) -> Dict[str, VersionResult]:
+    """Stall-prefill vs chunked-prefill admission, analytically.
+
+    Steady state, one batch turnover (every slot serves one request of
+    ``prompt_len`` prompt + ``max_new`` generated tokens):
+
+    - ``stall``: admission runs as separate prefill dispatches between
+      megasteps; *every* slot idles for each one. Wall per turnover =
+      ``max_new`` substeps + (batch / prefill_bucket) stalls of
+      (dispatch overhead + full-prompt prefill compute).
+      ``prefill_bucket`` = requests sharing one length-bucketed
+      dispatch (batch → perfect bucketing, 1 → worst case).
+    - ``chunked``: prompts ride inside the scan, one token per substep
+      — zero extra dispatches, but the riding slot spends
+      ``prompt_len`` substeps not decoding. Wall per turnover =
+      ``prompt_len + max_new`` substeps.
+
+    Returns decode-phase tok/s per mode (the engine benchmark's
+    ``mixed_workload`` metric). Chunked wins when the dispatch/stall
+    term outweighs the riding cost — exactly the paper's §5
+    fixed-cost-vs-FLOPs tradeoff applied to admission.
+    """
+    hw = hw or cm.a17_cpu(threads)
+    g = build_decoder_graph(cfg, seq=1, kv_len=kv_len, batch=batch,
+                            weight_format=weight_format, fused=True)
+    per_tok = cm.graph_time_wave(g, hw, overlap_efficiency=0.92)
+    carry = cm.decode_carry_bytes(cfg, batch, kv_len)
+    substep = cm.megastep_time(per_tok, hw, k, carry_bytes=carry,
+                               donate_carries=donate_carries) / k
+    gp = build_decoder_graph(cfg, seq=max(prompt_len, 1), kv_len=0,
+                             batch=1, weight_format=weight_format,
+                             fused=True)
+    prefill_t = cm.graph_time_wave(gp, hw, overlap_efficiency=0.92) \
+        + hw.dispatch_overhead_s
+    dec_tokens = batch * max_new
+
+    stall_wall = max_new * substep + (batch / max(prefill_bucket, 1e-9)) \
+        * prefill_t
+    chunked_wall = (prompt_len + max_new) * substep
+    return {
+        "stall": VersionResult(
+            "admission_stall", stall_wall,
+            cm.tokens_per_second(stall_wall, 1) * dec_tokens, len(g.nodes),
+            f"{batch/max(prefill_bucket,1e-9):.1f} prefill stalls x "
+            f"{prefill_t*1e6:.0f}us per turnover"),
+        "chunked": VersionResult(
+            "admission_chunked", chunked_wall,
+            cm.tokens_per_second(chunked_wall, 1) * dec_tokens,
+            len(g.nodes),
+            f"{prompt_len} rider substeps x {substep*1e6:.0f}us, "
+            "0 extra dispatches"),
+    }
 
 
 def backend_throughput(cfg: ModelConfig, backend: str, *,

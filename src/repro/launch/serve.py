@@ -33,6 +33,17 @@ def main() -> None:
     ap.add_argument("--megastep-k", type=int, default=None,
                     help="decode tokens per fused dispatch "
                          "(default: engine's DEFAULT_MEGASTEP_K)")
+    ap.add_argument("--admission", default="chunked",
+                    choices=["chunked", "stall"],
+                    help="prompt admission: ride inside the megastep "
+                         "scan (chunked) or batched prefill dispatches "
+                         "between megasteps (stall)")
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="on-device prompt chunk size for chunked "
+                         "admission (default: max(megastep_k, 16))")
+    ap.add_argument("--no-donate", action="store_true",
+                    help="disable cache/SlotState buffer donation into "
+                         "the megastep (doubles carry HBM traffic)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -48,7 +59,10 @@ def main() -> None:
                            max_len=args.max_len,
                            sampling=SamplingConfig(temperature=0.8,
                                                    top_k=40),
-                           megastep_k=args.megastep_k)
+                           megastep_k=args.megastep_k,
+                           admission=args.admission,
+                           prefill_chunk=args.prefill_chunk,
+                           donate_carries=not args.no_donate)
     rng = np.random.default_rng(0)
     reqs = [Request(uid=i,
                     prompt=rng.integers(
@@ -60,13 +74,17 @@ def main() -> None:
     t0 = time.time()
     engine.run()
     dt = time.time() - t0
-    print(f"arch={cfg.name} precision={args.precision}: "
+    admit = (f"{engine.stats.inscan_admissions} in-scan admissions, "
+             f"{engine.stats.chunk_refills} chunk refills"
+             if engine.admission == "chunked" else
+             f"{engine.stats.prefill_batches} prefill batches")
+    print(f"arch={cfg.name} precision={args.precision} "
+          f"admission={engine.admission}: "
           f"{engine.stats.tokens_generated} tokens / {dt:.1f}s = "
           f"{engine.stats.tokens_generated / dt:.1f} tok/s "
           f"({engine.stats.steps} decode steps in "
           f"{engine.stats.megasteps} dispatches [K={engine.megastep_k}], "
-          f"{engine.stats.prefills} prefills in "
-          f"{engine.stats.prefill_batches} batches)")
+          f"{engine.stats.prefills} prefills: {admit})")
 
 
 if __name__ == "__main__":

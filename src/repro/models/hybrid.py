@@ -82,7 +82,7 @@ def rglru_forward(p, cfg: ModelConfig, x: jax.Array,
     a, i = _gates(p, xb)
     h = rglru_scan(xb.astype(jnp.float32) * i.astype(jnp.float32), a,
                    init_state=cache.get("state") if cache else None)
-    h = (h * jax.nn.gelu(gate.astype(jnp.float32))).astype(x.dtype)
+    h = (h * layers.gelu(gate.astype(jnp.float32))).astype(x.dtype)
     out = layers.linear(p["out_proj"], h, use_pallas=cfg.use_pallas)
     if return_state:
         new_cache = {"conv": new_conv, "state": h[:, -1].astype(jnp.float32),
@@ -105,7 +105,7 @@ def rglru_decode(p, cfg: ModelConfig, x: jax.Array, cache: Dict
     xf = (xb[:, 0] * i[:, 0]).astype(jnp.float32)
     h_prev = cache["state"].astype(jnp.float32)         # (B, w)
     h = af * h_prev + jnp.sqrt(jnp.clip(1 - af ** 2, 1e-12)) * xf
-    y = (h * jax.nn.gelu(gate[:, 0].astype(jnp.float32)))[:, None]
+    y = (h * layers.gelu(gate[:, 0].astype(jnp.float32)))[:, None]
     out = layers.linear(p["out_proj"], y.astype(x.dtype),
                         use_pallas=cfg.use_pallas)
     new_cache = dict(cache, conv=new_conv, state=h,

@@ -105,6 +105,21 @@ def linear(p, x: jax.Array, *, use_pallas: bool = False) -> jax.Array:
     return y
 
 
+def gelu(x: jax.Array) -> jax.Array:
+    """tanh-approximation GELU with the tanh written as 2σ(2z)−1.
+
+    ``jax.nn.gelu`` lowers to a ``tanh`` HLO, which this container's
+    XLA cannot partition under SPMD (``UNIMPLEMENTED: tanh`` on the
+    multi-pod mesh). The logistic form is mathematically identical,
+    numerically stable in both tails, and partitions fine (``silu``
+    archs already compile through the same lowering).
+    """
+    xf = x.astype(jnp.float32)
+    z = 0.7978845608028654 * (xf + 0.044715 * xf * xf * xf)
+    t = 2.0 * jax.nn.sigmoid(2.0 * z) - 1.0
+    return (0.5 * xf * (1.0 + t)).astype(x.dtype)
+
+
 def activation_fn(name: str):
-    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu,
+    return {"silu": jax.nn.silu, "gelu": gelu,
             "relu": jax.nn.relu}[name]

@@ -493,7 +493,15 @@ class Model:
         cache frozen (no K/V write, no ``lens`` advance, no state
         update). The serving megastep uses this so retired (EOS /
         length-capped) slots can keep riding the fixed-shape batch
-        through a ``lax.scan`` without corrupting their cache.
+        through a ``lax.scan`` without corrupting their cache — and,
+        since every cache family writes at its own per-row ``lens``
+        cursor, the same machinery carries the engine's *chunked
+        prefill admission*: a prefilling slot feeds prompt tokens
+        through this step one per scan substep (its logits discarded
+        until the last prompt position) while its decoding neighbours
+        advance normally. For attention caches this is bit-identical
+        to ``prefill`` on this container's backend; recurrent archs
+        differ only by sequential-vs-associative scan rounding.
         """
         cfg = self.cfg
         B = tokens.shape[0]
@@ -564,6 +572,38 @@ class Model:
         x = layers.rmsnorm(x, params["final_norm"], cfg.norm_eps)
         logits = layers.unembed(params, x, cfg)[:, 0]
         return logits[:, :cfg.vocab_size], new_cache
+
+    # -- single-request reference loop (serving oracle) --------------------------
+    def reference_decode(self, params, prompt, max_new_tokens: int,
+                         eos_id: int = -1, *, max_len: int = 64,
+                         stepwise_prefill: bool = True):
+        """Greedy single-request decode loop — the oracle the serving
+        property suite holds the continuous-batching engine to.
+
+        ``stepwise_prefill=True`` feeds the prompt one token at a time
+        through ``decode_step`` (exactly the engine's chunked-admission
+        path, and shape-stable: one compiled (1, 1) step serves every
+        prompt length); ``False`` uses the fused ``prefill`` (the
+        stall-admission path). Returns the generated token list
+        (first sampled token included, stops at EOS / max_new).
+        """
+        if not hasattr(self, "_ref_jits"):
+            self._ref_jits = (jax.jit(self.prefill),
+                              jax.jit(self.decode_step))
+        pre, dec = self._ref_jits
+        cache = self.init_cache(1, max_len)
+        prompt = jnp.asarray(prompt, jnp.int32)
+        if stepwise_prefill:
+            for t in prompt:
+                logits, cache = dec(params, t[None, None], cache)
+        else:
+            logits, cache = pre(params, {"tokens": prompt[None]}, cache)
+        out = [int(jnp.argmax(logits[0]))]
+        while len(out) < max_new_tokens and out[-1] != eos_id:
+            logits, cache = dec(
+                params, jnp.asarray([[out[-1]]], jnp.int32), cache)
+            out.append(int(jnp.argmax(logits[0])))
+        return out
 
 
 # ---------------------------------------------------------------------------

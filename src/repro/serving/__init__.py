@@ -1,6 +1,9 @@
 from repro.serving.engine import (
-    DEFAULT_MEGASTEP_K, EngineStats, Request, ServingEngine, SlotState)
-from repro.serving.sampler import SamplingConfig, sample
+    DEFAULT_MEGASTEP_K, PHASE_DECODE, PHASE_IDLE, PHASE_PREFILL,
+    EngineStats, Request, ServingEngine, SlotState)
+from repro.serving.sampler import SamplingConfig, sample, sample_batched
 
 __all__ = ["ServingEngine", "Request", "EngineStats", "SlotState",
-           "SamplingConfig", "sample", "DEFAULT_MEGASTEP_K"]
+           "SamplingConfig", "sample", "sample_batched",
+           "DEFAULT_MEGASTEP_K",
+           "PHASE_IDLE", "PHASE_PREFILL", "PHASE_DECODE"]

@@ -1,28 +1,54 @@
-"""Batched serving engine: slot-based continuous batching with a
-device-resident multi-token decode "megastep".
+"""Continuous-batching serving engine: chunked prefill admission,
+per-slot sampling, and a device-resident multi-token decode "megastep"
+with donated carries.
 
 The engine owns a fixed-size decode batch (``slots``). Requests queue
-up; free slots are filled by prefilling prompts (length-bucketed, so
-several slots splice into the batch cache in ONE dispatch), and every
-``step()`` runs one **megastep**: ``megastep_k`` decode iterations
-fused into a single jitted ``jax.lax.scan`` that threads (cache,
-SlotState) on device and returns a ``(K, slots)`` token block plus
-emission masks — one dispatch and one device→host transfer per K
-tokens instead of per token.
+up, and every ``step()`` runs one **megastep**: ``megastep_k`` decode
+iterations fused into a single jitted ``jax.lax.scan`` that threads
+(cache, SlotState) on device and returns a ``(3, K, slots)`` block of
+(tokens, emission mask, prefill progress) — one dispatch and one
+device→host transfer per K tokens instead of per token.
 
 Why: the paper's §5 headline (2-thread CPU 17 tok/s beats the GPU's
 12.8 at batch-1 decode) is a *dispatch-overhead* result, not a FLOPs
 result — the GPU loses because every token pays kernel-launch/encode
-and a CPU↔GPU sync, exactly the shape of a per-token jitted dispatch
-with host-side sampling and ``int()`` syncs. "Understanding LLMs in
-Your Pockets" (arXiv:2410.03613) confirms launch amortization is the
-dominant mobile-inference lever. The megastep amortizes that fixed
-cost K× : sampling runs inside the jit (logits never leave the
-device), and EOS/length retirement is handled in-scan by a
-length-frozen cache write mask (``decode_step(advance_mask=...)``),
-so finished slots emit pad tokens without corrupting their cache.
-``core.dispatch.plan`` picks K from the same dispatch-overhead
-napkin math the paper's §6 model uses to predict the CPU win.
+and a CPU↔GPU sync. The megastep amortizes that fixed cost K×, and the
+three mechanisms below keep *mixed* prefill/decode traffic — where
+"Understanding LLMs in Your Pockets" (arXiv:2410.03613) shows
+on-device throughput actually collapses — on the same amortized path:
+
+- **Chunked prefill admission** (``admission="chunked"``, the
+  default): prompts ride *inside* the megastep scan. Each slot carries
+  a ``phase`` (idle / prefill / decode) plus a ``prefill_pos`` cursor
+  and a fixed-size on-device prompt chunk buffer (``prefill_chunk``
+  tokens, refreshed by the host between megasteps through the same
+  megastep dispatch — zero extra host dispatches). A prefilling slot
+  consumes one prompt token per scan substep through
+  ``Model.decode_step`` — the same cache-write path decode uses, so
+  the existing ``advance_mask`` machinery covers admission for every
+  cache family — and emits its first sampled token the substep it
+  consumes the last prompt token. Decoding neighbours never stall.
+  ``admission="stall"`` keeps the PR-1 behaviour: length-bucketed
+  batched prefill dispatches between megasteps (the configuration
+  ``benchmarks/serving_bench.py``'s mixed-workload sweep measures
+  losing).
+- **Per-slot sampling params**: ``temperature`` / ``top_k`` /
+  ``top_p`` are SlotState fields threaded through the scanned
+  ``sample_batched``, so heterogeneous requests (greedy next to
+  temperature 1.2) share one batch; greedy rows stay exact argmax and
+  consume no randomness.
+- **Donated megastep carries** (``donate_carries=True``): the cache +
+  SlotState pytrees are donated into the megastep and prefill jits
+  (``donate_argnums``), so XLA updates the multi-MB KV/state carry in
+  place instead of writing a second copy — halving the carry's HBM
+  traffic at each dispatch boundary. ``core.cost_model.megastep_time``
+  accounts the same term analytically.
+
+EOS/length retirement stays in-scan via the length-frozen cache write
+mask (``decode_step(advance_mask=...)``), so finished slots emit pad
+tokens without corrupting their cache. ``core.dispatch.plan`` picks K
+(and the admission mode) from the same dispatch-overhead napkin math
+the paper's §6 model uses to predict the CPU win.
 """
 from __future__ import annotations
 
@@ -36,7 +62,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import Model
-from repro.serving.sampler import SamplingConfig, sample
+from repro.serving.sampler import SamplingConfig, sample_batched
 
 # Fallback K when the caller doesn't run the planner: one dispatch per
 # 8 tokens keeps Python/XLA launch overhead ≲10% for even the smallest
@@ -45,6 +71,11 @@ DEFAULT_MEGASTEP_K = 8
 
 PAD_ID = 0
 
+# SlotState.phase values (device-resident slot lifecycle)
+PHASE_IDLE = 0      # retired / never filled: cache frozen, no emission
+PHASE_PREFILL = 1   # consuming prompt tokens in-scan, no emission yet
+PHASE_DECODE = 2    # generating: sample + emit every substep
+
 
 @dataclasses.dataclass
 class Request:
@@ -52,6 +83,10 @@ class Request:
     prompt: np.ndarray               # (S,) int32
     max_new_tokens: int = 32
     eos_id: int = -1                 # -1 → never stops early
+    # per-request sampling overrides (None → engine's SamplingConfig)
+    temperature: Optional[float] = None
+    top_k: Optional[int] = None
+    top_p: Optional[float] = None
     # filled by the engine:
     output: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
@@ -62,32 +97,49 @@ class EngineStats:
     steps: int = 0               # decode substeps executed (K per megastep)
     megasteps: int = 0           # fused decode dispatches
     tokens_generated: int = 0
-    prefills: int = 0            # requests prefilled
-    prefill_batches: int = 0     # prefill dispatches (≤ prefills)
+    prefills: int = 0            # requests admitted (either path)
+    prefill_batches: int = 0     # stall-path prefill dispatches
+    inscan_admissions: int = 0   # requests admitted inside the megastep
+    chunk_refills: int = 0       # prompt chunk buffers refreshed
     decode_wall_s: float = 0.0   # wall time in megastep dispatch + drain
 
 
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass
 class SlotState:
-    """Device-resident per-slot decode state threaded through the
+    """Device-resident per-slot serving state threaded through the
     megastep scan. Mirrors the host's ``active``/``Request`` view; the
-    host only touches it between megasteps (slot refill)."""
+    host only touches it between megasteps (slot refill), and then
+    only through the megastep's own admission arguments."""
     last_token: jax.Array   # (slots,) int32 — input token for next step
     gen_len: jax.Array      # (slots,) int32 — tokens generated so far
     max_new: jax.Array      # (slots,) int32
     eos_id: jax.Array       # (slots,) int32
-    active: jax.Array       # (slots,) bool
+    phase: jax.Array        # (slots,) int32 — PHASE_IDLE/PREFILL/DECODE
+    prefill_pos: jax.Array  # (slots,) int32 — next prompt index to feed
+    prompt_len: jax.Array   # (slots,) int32 — total prompt length
+    chunk_base: jax.Array   # (slots,) int32 — prompt index of buf[:, 0]
+    prompt_buf: jax.Array   # (slots, prefill_chunk) int32 — prompt chunk
+    temperature: jax.Array  # (slots,) float32 — per-slot sampling
+    top_k: jax.Array        # (slots,) int32
+    top_p: jax.Array        # (slots,) float32
     rng: jax.Array          # PRNG key (one split per decode substep)
 
 
-def _init_slot_state(slots: int, rng: jax.Array) -> SlotState:
+def _init_slot_state(slots: int, chunk: int, rng: jax.Array) -> SlotState:
     return SlotState(
         last_token=jnp.zeros((slots,), jnp.int32),
         gen_len=jnp.zeros((slots,), jnp.int32),
         max_new=jnp.zeros((slots,), jnp.int32),
         eos_id=jnp.full((slots,), -1, jnp.int32),
-        active=jnp.zeros((slots,), bool),
+        phase=jnp.full((slots,), PHASE_IDLE, jnp.int32),
+        prefill_pos=jnp.zeros((slots,), jnp.int32),
+        prompt_len=jnp.zeros((slots,), jnp.int32),
+        chunk_base=jnp.zeros((slots,), jnp.int32),
+        prompt_buf=jnp.zeros((slots, chunk), jnp.int32),
+        temperature=jnp.zeros((slots,), jnp.float32),
+        top_k=jnp.zeros((slots,), jnp.int32),
+        top_p=jnp.ones((slots,), jnp.float32),
         rng=rng)
 
 
@@ -98,7 +150,10 @@ class ServingEngine:
                  extra_inputs: Optional[Dict[str, Any]] = None,
                  rng: Optional[jax.Array] = None,
                  megastep_k: Optional[int] = None,
-                 megastep_unroll: bool = False):
+                 megastep_unroll: bool = False,
+                 admission: str = "chunked",
+                 prefill_chunk: Optional[int] = None,
+                 donate_carries: bool = True):
         self.model = model
         self.cfg = model.cfg
         self.params = params
@@ -106,7 +161,7 @@ class ServingEngine:
         self.max_len = max_len
         self.sampling = sampling
         self.extra = extra_inputs or {}
-        self.rng = rng if rng is not None else jax.random.PRNGKey(0)
+        self._init_rng = rng if rng is not None else jax.random.PRNGKey(0)
         if megastep_k is not None and int(megastep_k) < 1:
             raise ValueError(
                 f"megastep_k must be >= 1 (got {megastep_k}); "
@@ -118,25 +173,74 @@ class ServingEngine:
         # at compile time ∝ K — worth it for small dispatch-bound models
         self.megastep_unroll = megastep_unroll
 
-        self.cache = model.init_cache(slots, max_len)
-        self.active: List[Optional[Request]] = [None] * slots
-        self.queue: Deque[Request] = collections.deque()
-        self.stats = EngineStats()
+        if admission not in ("chunked", "stall"):
+            raise ValueError(f"admission must be 'chunked' or 'stall' "
+                             f"(got {admission!r})")
+        # chunked admission feeds raw token ids through decode_step; it
+        # cannot synthesize encoder frames / VLM prefix embeddings, so
+        # those archs keep the batched-prefill admission path.
+        if self.cfg.arch_type in ("audio", "vlm") or self.extra:
+            admission = "stall"
+        self.admission = admission
+        # prompt tokens staged on device per slot; the host refreshes
+        # the chunk through the megastep's admission args, so any value
+        # >= megastep_k admits without ever starving the scan
+        self.prefill_chunk = int(prefill_chunk) if prefill_chunk else \
+            max(self.megastep_k, 16)
+        self.donate_carries = donate_carries
 
-        self.rng, st_key = jax.random.split(self.rng)
-        self.state = _init_slot_state(slots, st_key)
+        self.queue: Deque[Request] = collections.deque()
 
         # recurrent state makes padding unsound → exact-length buckets
         self._pad_prefill = self.cfg.arch_type not in ("ssm", "hybrid")
         window = model.window_for(max_len)
         self._cache_seq = min(max_len, window) if window else max_len
 
-        self._megastep = jax.jit(self._megastep_impl)
-        self._prefill = jax.jit(self._prefill_impl)
+        # donated carries: cache + SlotState are consumed by the
+        # dispatch and updated in place (we immediately rebind both).
+        # ``all_greedy`` is static: an all-greedy batch (the common
+        # serving benchmark configuration) compiles a pure-argmax
+        # sampler, skipping sample_batched's per-substep full-vocab
+        # sorts; the stochastic variant compiles lazily on first use.
+        donate = (1, 2) if donate_carries else ()
+        self._megastep = jax.jit(self._megastep_impl,
+                                 donate_argnums=donate,
+                                 static_argnums=(4,))
+        donate_pf = (3, 5) if donate_carries else ()
+        self._prefill = jax.jit(self._prefill_impl,
+                                donate_argnums=donate_pf)
+        self.reset(rng=self._init_rng)
 
-    # -- batched prefill into free slots ---------------------------------
+    def reset(self, rng: Optional[jax.Array] = None) -> None:
+        """Drop all requests and device state (fresh cache + slots);
+        compiled megastep/prefill executables are kept, so a reset
+        engine re-serves without re-tracing."""
+        if rng is not None:
+            self._init_rng = rng
+        st_key = jax.random.split(self._init_rng)[1]
+        self.cache = self.model.init_cache(self.slots, self.max_len)
+        self.state = _init_slot_state(self.slots, self.prefill_chunk,
+                                      st_key)
+        self.active: List[Optional[Request]] = [None] * self.slots
+        # host mirror of prefill progress (from the megastep's pos row)
+        self._prefill_pos: List[int] = [0] * self.slots
+        # slots currently serving a stochastic (temperature>0) request;
+        # empty → the megastep compiles/runs its argmax-only variant
+        self._stochastic_slots: set = set()
+        self.queue.clear()
+        self.stats = EngineStats()
+
+    # -- per-request sampling ----------------------------------------------
+    def _req_sampling(self, req: Request):
+        smp = self.sampling
+        return (
+            smp.temperature if req.temperature is None else req.temperature,
+            smp.top_k if req.top_k is None else req.top_k,
+            smp.top_p if req.top_p is None else req.top_p)
+
+    # -- batched prefill into free slots (admission="stall") ---------------
     def _prefill_impl(self, params, tokens, seq_lens, cache, slot_idx,
-                      state, max_new, eos_id):
+                      state, max_new, eos_id, temp, top_k, top_p):
         """Prefill a length bucket (N, S) in one dispatch: splice its
         cache rows into the batch cache at ``slot_idx`` (N,), sample
         the first token in-jit, and refill the SlotState rows — the
@@ -162,14 +266,23 @@ class ServingEngine:
         new_cache = jax.tree_util.tree_map(splice, cache, one, axes)
 
         rng, key = jax.random.split(state.rng)
-        first = sample(logits, key, self.sampling)
+        first = sample_batched(logits, key, temp, top_k, top_p)
         alive = (first != eos_id) & (max_new > 1)
-        new_state = SlotState(
+        phase = jnp.where(alive, PHASE_DECODE, PHASE_IDLE)
+        new_state = dataclasses.replace(
+            state,
             last_token=state.last_token.at[slot_idx].set(first),
             gen_len=state.gen_len.at[slot_idx].set(1),
             max_new=state.max_new.at[slot_idx].set(max_new),
             eos_id=state.eos_id.at[slot_idx].set(eos_id),
-            active=state.active.at[slot_idx].set(alive),
+            phase=state.phase.at[slot_idx].set(phase),
+            prefill_pos=state.prefill_pos.at[slot_idx].set(
+                seq_lens.astype(jnp.int32)),
+            prompt_len=state.prompt_len.at[slot_idx].set(
+                seq_lens.astype(jnp.int32)),
+            temperature=state.temperature.at[slot_idx].set(temp),
+            top_k=state.top_k.at[slot_idx].set(top_k),
+            top_p=state.top_p.at[slot_idx].set(top_p),
             rng=rng)
         return first, new_cache, new_state
 
@@ -186,11 +299,17 @@ class ServingEngine:
     def submit(self, req: Request) -> None:
         self.queue.append(req)
 
-    def _fill_slots(self) -> None:
+    def _take_free(self) -> List:
         free = [s for s in range(self.slots) if self.active[s] is None]
         taken = []
         while free and self.queue:
             taken.append((free.pop(0), self.queue.popleft()))
+        return taken
+
+    def _fill_slots_stall(self) -> None:
+        """PR-1 admission: length-bucketed prefill dispatches that run
+        between megasteps — and stall every decoding slot meanwhile."""
+        taken = self._take_free()
         if not taken:
             return
         buckets: Dict[int, List] = {}
@@ -206,10 +325,15 @@ class ServingEngine:
             maxnew = np.asarray([r.max_new_tokens for _, r in group],
                                 np.int32)
             eos = np.asarray([r.eos_id for _, r in group], np.int32)
+            smp = [self._req_sampling(r) for _, r in group]
+            temp = np.asarray([v[0] for v in smp], np.float32)
+            topk = np.asarray([v[1] for v in smp], np.int32)
+            topp = np.asarray([v[2] for v in smp], np.float32)
             first, self.cache, self.state = self._prefill(
                 self.params, jnp.asarray(toks), jnp.asarray(lens),
                 self.cache, jnp.asarray(slot_idx), self.state,
-                jnp.asarray(maxnew), jnp.asarray(eos))
+                jnp.asarray(maxnew), jnp.asarray(eos),
+                jnp.asarray(temp), jnp.asarray(topk), jnp.asarray(topp))
             first = np.asarray(first)
             self.stats.prefill_batches += 1
 
@@ -218,56 +342,190 @@ class ServingEngine:
                 req.output.append(tok)
                 self.stats.prefills += 1
                 self.stats.tokens_generated += 1
+                self._prefill_pos[s] = len(req.prompt)
                 if tok == req.eos_id or len(req.output) >= \
                         req.max_new_tokens:
                     req.done = True       # first token already ends it
                 else:
                     self.active[s] = req
+                    if self._req_sampling(req)[0] > 0.0:
+                        self._stochastic_slots.add(s)
 
-    # -- fused K-token decode ---------------------------------------------
-    def _megastep_impl(self, params, cache, state):
-        """K decode substeps in one ``lax.scan``: in-jit sampling, per
-        slot EOS/length retirement via the frozen-write mask. Returns
-        (cache, state, tokens (K, slots), emitted (K, slots))."""
-        smp = self.sampling
+    def _empty_admit(self) -> Dict[str, np.ndarray]:
+        n, c = self.slots, self.prefill_chunk
+        return {"new": np.zeros((n,), bool),
+                "refill": np.zeros((n,), bool),
+                "tokens": np.zeros((n, c), np.int32),
+                "base": np.zeros((n,), np.int32),
+                "prompt_len": np.zeros((n,), np.int32),
+                "max_new": np.zeros((n,), np.int32),
+                "eos": np.full((n,), -1, np.int32),
+                "temp": np.zeros((n,), np.float32),
+                "top_k": np.zeros((n,), np.int32),
+                "top_p": np.ones((n,), np.float32)}
+
+    def _fill_slots_chunked(self) -> Dict[str, np.ndarray]:
+        """Build the megastep's admission arguments: next prompt chunk
+        for slots mid-prefill, first chunk + metadata for fresh
+        requests. No model dispatch happens here — the arrays ride into
+        the already-scheduled megastep, so admission costs zero host
+        dispatches beyond the megastep cadence."""
+        admit = self._empty_admit()
+        chunk = self.prefill_chunk
+        # refresh the chunk window for slots still consuming a prompt
+        for s, req in enumerate(self.active):
+            if req is None:
+                continue
+            pos = self._prefill_pos[s]
+            if pos >= len(req.prompt):
+                continue
+            admit["refill"][s] = True
+            admit["base"][s] = pos
+            seg = req.prompt[pos:pos + chunk]
+            admit["tokens"][s, :len(seg)] = seg
+            if pos > 0:
+                self.stats.chunk_refills += 1
+        # admit fresh requests to free slots
+        for s, req in self._take_free():
+            admit["new"][s] = True
+            admit["base"][s] = 0
+            seg = req.prompt[:chunk]
+            admit["tokens"][s, :len(seg)] = seg
+            admit["prompt_len"][s] = len(req.prompt)
+            admit["max_new"][s] = req.max_new_tokens
+            admit["eos"][s] = req.eos_id
+            temp, topk, topp = self._req_sampling(req)
+            admit["temp"][s] = temp
+            admit["top_k"][s] = topk
+            admit["top_p"][s] = topp
+            self.active[s] = req
+            self._prefill_pos[s] = 0
+            if temp > 0.0:
+                self._stochastic_slots.add(s)
+            self.stats.prefills += 1
+            self.stats.inscan_admissions += 1
+        return admit
+
+    def _fill_slots(self) -> Dict[str, np.ndarray]:
+        if self.admission == "chunked":
+            return self._fill_slots_chunked()
+        self._fill_slots_stall()
+        return self._empty_admit()
+
+    # -- fused K-token decode + in-scan admission ---------------------------
+    def _merge_admissions(self, cache, st: SlotState, admit):
+        """Fold the host's admission arrays into the carry, inside the
+        megastep jit. Fresh slots get their cache rows zeroed (every
+        family's init state is zeros; attention junk past ``lens`` is
+        never read) and their SlotState rows rebuilt; chunk refills
+        only swap the prompt window."""
+        nm = jnp.asarray(admit["new"])
+        anym = nm | jnp.asarray(admit["refill"])
+        axes = self.model.cache_axes()
+
+        def reset(leaf, ax):
+            b = ax.index("batch")
+            m = nm.reshape(tuple(nm.shape[0] if i == b else 1
+                                 for i in range(leaf.ndim)))
+            return jnp.where(m, jnp.zeros((), leaf.dtype), leaf)
+
+        cache = jax.tree_util.tree_map(reset, cache, axes)
+        new_state = SlotState(
+            last_token=jnp.where(nm, 0, st.last_token),
+            gen_len=jnp.where(nm, 0, st.gen_len),
+            max_new=jnp.where(nm, admit["max_new"], st.max_new),
+            eos_id=jnp.where(nm, admit["eos"], st.eos_id),
+            phase=jnp.where(nm, PHASE_PREFILL, st.phase),
+            prefill_pos=jnp.where(nm, 0, st.prefill_pos),
+            prompt_len=jnp.where(nm, admit["prompt_len"], st.prompt_len),
+            chunk_base=jnp.where(anym, admit["base"], st.chunk_base),
+            prompt_buf=jnp.where(anym[:, None], admit["tokens"],
+                                 st.prompt_buf),
+            temperature=jnp.where(nm, admit["temp"], st.temperature),
+            top_k=jnp.where(nm, admit["top_k"], st.top_k),
+            top_p=jnp.where(nm, admit["top_p"], st.top_p),
+            rng=st.rng)
+        return cache, new_state
+
+    def _megastep_impl(self, params, cache, state, admit, all_greedy):
+        """K decode substeps in one ``lax.scan``: admission merge,
+        in-jit per-slot sampling, per-slot EOS/length retirement via
+        the frozen-write mask. Prefilling slots feed prompt tokens from
+        their chunk buffer instead of ``last_token`` and stay silent
+        until the last prompt position. ``all_greedy`` (static) traces
+        a pure-argmax sampler when no active slot is stochastic.
+        Returns (cache, state, block (3, K, slots) = tokens / emitted /
+        prefill progress)."""
+        cache, state = self._merge_admissions(cache, state, admit)
+        chunk = self.prefill_chunk
 
         def body(carry, _):
             cache, st = carry
+            is_pre = st.phase == PHASE_PREFILL
+            is_dec = st.phase == PHASE_DECODE
+            off = jnp.clip(st.prefill_pos - st.chunk_base, 0, chunk - 1)
+            ptok = jnp.take_along_axis(st.prompt_buf, off[:, None],
+                                       axis=1)[:, 0]
+            # a prefill slot whose chunk window ran dry idles (cache
+            # frozen) until the host refreshes the buffer — can only
+            # happen when prefill_chunk < megastep_k
+            starved = is_pre & (st.prefill_pos - st.chunk_base >= chunk)
+            feeding = is_pre & ~starved
+            in_tok = jnp.where(is_pre, ptok, st.last_token)
+            advance = feeding | is_dec
             logits, cache = self.model.decode_step(
-                params, st.last_token[:, None], cache,
-                advance_mask=st.active)
+                params, in_tok[:, None], cache, advance_mask=advance)
             rng, step_key = jax.random.split(st.rng)
-            tok = sample(logits, step_key, smp)
-            tok = jnp.where(st.active, tok, jnp.int32(PAD_ID))
-            gen_len = st.gen_len + st.active.astype(jnp.int32)
-            done_now = st.active & ((tok == st.eos_id) |
-                                    (gen_len >= st.max_new))
-            new_st = SlotState(
-                last_token=jnp.where(st.active, tok, st.last_token),
-                gen_len=gen_len, max_new=st.max_new, eos_id=st.eos_id,
-                active=st.active & ~done_now, rng=rng)
-            return (cache, new_st), (tok, st.active)
+            if all_greedy:
+                tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            else:
+                tok = sample_batched(logits, step_key, st.temperature,
+                                     st.top_k, st.top_p)
+            finishing = feeding & (st.prefill_pos + 1 >= st.prompt_len)
+            emit = is_dec | finishing
+            tok = jnp.where(emit, tok, jnp.int32(PAD_ID))
+            gen_len = st.gen_len + emit.astype(jnp.int32)
+            done_now = emit & ((tok == st.eos_id) |
+                               (gen_len >= st.max_new))
+            phase = jnp.where(
+                emit, jnp.where(done_now, PHASE_IDLE, PHASE_DECODE),
+                st.phase)
+            new_st = dataclasses.replace(
+                st,
+                last_token=jnp.where(emit, tok, st.last_token),
+                gen_len=gen_len,
+                phase=phase,
+                prefill_pos=st.prefill_pos + feeding.astype(jnp.int32),
+                rng=rng)
+            return (cache, new_st), (tok, emit, new_st.prefill_pos)
 
-        (cache, state), (toks, emitted) = jax.lax.scan(
+        (cache, state), (toks, emitted, pos) = jax.lax.scan(
             body, (cache, state), None, length=self.megastep_k,
             unroll=self.megastep_unroll)
-        # pack (tokens, emitted) into one (2, K, slots) block → a single
-        # device→host transfer per megastep
-        return cache, state, jnp.stack([toks, emitted.astype(jnp.int32)])
+        # pack (tokens, emitted, prefill progress) into one
+        # (3, K, slots) block → a single device→host transfer
+        return cache, state, jnp.stack(
+            [toks, emitted.astype(jnp.int32), pos])
 
     def step(self) -> int:
-        """One megastep (up to ``megastep_k`` tokens per active slot);
-        drain its token block. Returns #slots still active."""
-        self._fill_slots()
+        """Admit what fits, run one megastep (up to ``megastep_k``
+        tokens per decoding slot), drain its token block. Returns
+        #slots still occupied."""
+        admit = self._fill_slots()
         if not any(r is not None for r in self.active):
             return 0
         t0 = time.perf_counter()
         self.cache, self.state, block = self._megastep(
-            self.params, self.cache, self.state)
+            self.params, self.cache, self.state, admit,
+            not self._stochastic_slots)
         block = np.asarray(block)        # ONE host transfer per K tokens
         toks, emitted = block[0], block[1].astype(bool)
+        last_pos = block[2][-1]
         self.stats.megasteps += 1
         self.stats.steps += toks.shape[0]
+        for s in range(self.slots):
+            if self.active[s] is not None:
+                self._prefill_pos[s] = int(last_pos[s])
         for k in range(toks.shape[0]):
             for s in range(self.slots):
                 req = self.active[s]
@@ -280,13 +538,13 @@ class ServingEngine:
                         req.max_new_tokens:
                     req.done = True      # device already froze this slot
                     self.active[s] = None
+                    self._stochastic_slots.discard(s)
         self.stats.decode_wall_s += time.perf_counter() - t0
         return sum(r is not None for r in self.active)
 
     def run(self, max_steps: int = 10000) -> None:
         """Drain queue + active slots (``max_steps`` megasteps)."""
         for _ in range(max_steps):
-            self._fill_slots()
             if not self.queue and not any(
                     r is not None for r in self.active):
                 return

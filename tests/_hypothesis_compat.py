@@ -1,33 +1,164 @@
 """Gate for the optional ``hypothesis`` dependency.
 
-The container may not ship hypothesis; property-based tests then skip
-individually while the example-based tests in the same module still
-run (a bare ``import hypothesis`` at module top would error the whole
-collection instead).
-"""
-try:
-    from hypothesis import given, settings, strategies as st
-except ImportError:                     # pragma: no cover
-    import pytest
+Two modes:
 
-    def given(*_args, **_kwargs):
+- hypothesis installed → re-export the real ``given``/``settings``/
+  ``st`` and load a deterministic CI profile (``derandomize=True``, no
+  deadline) so property tests produce the same examples on every run.
+- hypothesis missing (this CI container) → a **deterministic fallback
+  runner**: a minimal strategy set driven by a seeded ``random.Random``
+  draws ``max_examples`` example tuples and calls the test body with
+  each. Property tests therefore still *run* (not skip), with a fixed,
+  reproducible example stream.
+
+Knobs (``scripts/run_tier1.sh`` pins them):
+
+- ``REPRO_HYP_SEED``      — fallback RNG seed (default 0; the real
+  hypothesis gets determinism from ``derandomize`` instead)
+- ``REPRO_HYP_EXAMPLES``  — cap on examples per test. The fallback
+  applies it per test (min with the test's ``max_examples``); with
+  hypothesis installed it becomes the profile default, which explicit
+  per-test ``@settings(max_examples=...)`` still override.
+
+Only the subset of the hypothesis API this repo uses is shimmed:
+positional ``@given(st.integers(...), st.sampled_from(...), ...)``
+above ``@settings(max_examples=..., deadline=...)``, with strategies
+``integers`` / ``sampled_from`` / ``booleans`` / ``floats`` /
+``lists`` / ``tuples`` / ``just``.
+"""
+import os
+
+_DEF_EXAMPLES = 20
+
+
+def _env_examples(default):
+    cap = os.environ.get("REPRO_HYP_EXAMPLES")
+    return min(default, int(cap)) if cap else default
+
+
+try:
+    from hypothesis import HealthCheck, given, settings, strategies as st
+
+    _profile = dict(
+        derandomize=True,
+        deadline=None,
+        suppress_health_check=list(HealthCheck))
+    if os.environ.get("REPRO_HYP_EXAMPLES"):
+        _profile["max_examples"] = int(os.environ["REPRO_HYP_EXAMPLES"])
+    settings.register_profile("repro_ci", **_profile)
+    settings.load_profile("repro_ci")
+except ImportError:                     # pragma: no cover
+    import random
+
+    class _Strategy:
+        def example(self, rng):
+            raise NotImplementedError
+
+    class _Integers(_Strategy):
+        def __init__(self, lo, hi):
+            self.lo, self.hi = lo, hi
+
+        def example(self, rng):
+            return rng.randint(self.lo, self.hi)   # inclusive, like st
+
+    class _Floats(_Strategy):
+        def __init__(self, lo, hi):
+            self.lo, self.hi = lo, hi
+
+        def example(self, rng):
+            return rng.uniform(self.lo, self.hi)
+
+    class _SampledFrom(_Strategy):
+        def __init__(self, items):
+            self.items = list(items)
+
+        def example(self, rng):
+            return rng.choice(self.items)
+
+    class _Booleans(_Strategy):
+        def example(self, rng):
+            return rng.random() < 0.5
+
+    class _Lists(_Strategy):
+        def __init__(self, elem, min_size=0, max_size=10):
+            self.elem, self.lo, self.hi = elem, min_size, max_size
+
+        def example(self, rng):
+            n = rng.randint(self.lo, self.hi)
+            return [self.elem.example(rng) for _ in range(n)]
+
+    class _Tuples(_Strategy):
+        def __init__(self, *elems):
+            self.elems = elems
+
+        def example(self, rng):
+            return tuple(e.example(rng) for e in self.elems)
+
+    class _Just(_Strategy):
+        def __init__(self, value):
+            self.value = value
+
+        def example(self, rng):
+            return self.value
+
+    class _St:
+        @staticmethod
+        def integers(min_value=0, max_value=2 ** 31 - 1):
+            return _Integers(min_value, max_value)
+
+        @staticmethod
+        def floats(min_value=0.0, max_value=1.0, **_kw):
+            return _Floats(min_value, max_value)
+
+        @staticmethod
+        def sampled_from(items):
+            return _SampledFrom(items)
+
+        @staticmethod
+        def booleans():
+            return _Booleans()
+
+        @staticmethod
+        def lists(elem, min_size=0, max_size=10, **_kw):
+            return _Lists(elem, min_size, max_size)
+
+        @staticmethod
+        def tuples(*elems):
+            return _Tuples(*elems)
+
+        @staticmethod
+        def just(value):
+            return _Just(value)
+
+    st = _St()
+
+    def settings(max_examples=_DEF_EXAMPLES, **_kwargs):
         def deco(fn):
-            # zero-arg wrapper: the original signature only names
-            # hypothesis-generated params, which pytest would otherwise
-            # try to resolve as fixtures
-            def wrapper():
-                pytest.skip("hypothesis not installed")
-            wrapper.__name__ = getattr(fn, "__name__", "property_test")
-            return wrapper
+            fn._repro_max_examples = max_examples
+            return fn
         return deco
 
-    def settings(*_args, **_kwargs):
-        return lambda fn: fn
-
-    class _AnyStrategy:
-        def __getattr__(self, name):
-            return lambda *a, **k: None
-
-    st = _AnyStrategy()
+    def given(*strategies):
+        def deco(fn):
+            def wrapper():
+                n = _env_examples(
+                    getattr(fn, "_repro_max_examples", _DEF_EXAMPLES))
+                seed = int(os.environ.get("REPRO_HYP_SEED", "0"))
+                rng = random.Random(seed)
+                for i in range(n):
+                    args = [s.example(rng) for s in strategies]
+                    try:
+                        fn(*args)
+                    except Exception:
+                        print(f"[hypothesis-compat] falsifying example "
+                              f"#{i} (seed={seed}): {args!r}")
+                        raise
+            # zero-arg wrapper: the original signature only names
+            # generated params, which pytest would otherwise try to
+            # resolve as fixtures
+            wrapper.__name__ = getattr(fn, "__name__", "property_test")
+            wrapper.__doc__ = getattr(fn, "__doc__", None)
+            return wrapper
+        return deco
 
 __all__ = ["given", "settings", "st"]

@@ -1,4 +1,11 @@
-"""Serving engine + sampler behaviour."""
+"""Serving engine + sampler behaviour, across every cache family.
+
+``engine_setup`` is parametrized over the four architecture families
+the engine serves — full attention (deepseek), long-context dense
+(mistral-nemo), SSM (mamba2) and RG-LRU hybrid with sliding-window
+local attention (recurrentgemma) — so every engine test exercises
+every cache layout, not just the default arch.
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -8,10 +15,13 @@ from repro.configs import get_config, reduced
 from repro.models import Model
 from repro.serving import Request, SamplingConfig, ServingEngine, sample
 
+ARCHS = ("deepseek-7b", "mistral-nemo-12b", "mamba2-2.7b",
+         "recurrentgemma-2b")
 
-@pytest.fixture(scope="module")
-def engine_setup():
-    cfg = reduced(get_config("deepseek-7b"))
+
+@pytest.fixture(scope="module", params=ARCHS)
+def engine_setup(request):
+    cfg = reduced(get_config(request.param))
     m = Model(cfg)
     params = m.init(jax.random.PRNGKey(0))
     return cfg, m, params
@@ -45,10 +55,12 @@ def test_engine_completes_all_requests(engine_setup):
 
 
 def test_engine_greedy_matches_manual_decode(engine_setup):
-    """Engine output == hand-rolled prefill+decode loop (greedy)."""
+    """Stall-admission engine output == hand-rolled prefill+decode
+    loop (greedy) — the fused-prefill path oracle."""
     cfg, m, params = engine_setup
     prompt = np.asarray([3, 1, 4, 1, 5], np.int32)
-    eng = ServingEngine(m, params, slots=1, max_len=64)
+    eng = ServingEngine(m, params, slots=1, max_len=64,
+                        admission="stall")
     req = Request(uid=0, prompt=prompt, max_new_tokens=4)
     eng.submit(req)
     eng.run()
@@ -64,6 +76,21 @@ def test_engine_greedy_matches_manual_decode(engine_setup):
     assert req.output == toks
 
 
+def test_chunked_engine_matches_reference(engine_setup):
+    """Chunked-admission engine output == the single-request reference
+    decode loop, on every cache family (the in-scan admission oracle;
+    randomized sweeps live in test_serving_properties.py)."""
+    cfg, m, params = engine_setup
+    prompt = np.asarray([3, 1, 4, 1, 5], np.int32)
+    eng = ServingEngine(m, params, slots=2, max_len=64,
+                        admission="chunked")
+    req = Request(uid=0, prompt=prompt, max_new_tokens=6)
+    eng.submit(req)
+    eng.run()
+    assert req.output == m.reference_decode(params, prompt, 6)
+    assert eng.stats.prefill_batches == 0
+
+
 def test_engine_eos_stops_early(engine_setup):
     cfg, m, params = engine_setup
     eng = ServingEngine(m, params, slots=1, max_len=64)
@@ -73,11 +100,11 @@ def test_engine_eos_stops_early(engine_setup):
     eng.submit(probe)
     eng.run()
     eos = probe.output[0]
-    eng2 = ServingEngine(m, params, slots=1, max_len=64)
+    eng.reset()
     req = Request(uid=1, prompt=np.asarray([1, 2, 3], np.int32),
                   max_new_tokens=50, eos_id=eos)
-    eng2.submit(req)
-    eng2.run()
+    eng.submit(req)
+    eng.run()
     assert req.done and len(req.output) == 1
 
 
@@ -141,48 +168,122 @@ def test_megastep_max_new_mid_block(engine_setup):
     assert ref[1] == ref[8]
 
 
-def test_batched_prefill_one_dispatch(engine_setup):
-    """Prompts landing in the same length bucket prefill several slots
-    per jitted dispatch (prefill_batches < prefills)."""
+def test_per_slot_sampling_mixed_batch(engine_setup):
+    """Two slots with different temperatures decode in ONE batch: the
+    greedy slot's stream matches the single-request reference exactly
+    (greedy rows never consume PRNG), the hot slot still completes."""
     cfg, m, params = engine_setup
-    eng = ServingEngine(m, params, slots=4, max_len=64)
+    prompt = np.asarray([5, 3, 2, 4], np.int32)
+    eng = ServingEngine(m, params, slots=2, max_len=64)
+    greedy = Request(uid=0, prompt=prompt, max_new_tokens=8)
+    hot = Request(uid=1, prompt=prompt, max_new_tokens=8,
+                  temperature=1.3, top_k=20)
+    eng.submit(greedy)
+    eng.submit(hot)
+    eng.run()
+    assert greedy.done and hot.done
+    assert len(greedy.output) == 8 and len(hot.output) == 8
+    assert greedy.output == m.reference_decode(params, prompt, 8)
+    assert all(0 <= t < cfg.vocab_size for t in hot.output)
+
+
+def test_batched_prefill_one_dispatch(engine_setup):
+    """Stall admission: prompts landing in the same length bucket
+    prefill several slots per jitted dispatch (prefill_batches <
+    prefills). Recurrent archs bucket by exact length (padding is
+    unsound through their state scan), so they pay one dispatch per
+    distinct length."""
+    cfg, m, params = engine_setup
+    eng = ServingEngine(m, params, slots=4, max_len=64,
+                        admission="stall")
     for i in range(4):   # lengths 5..8 → all in the pow2-8 bucket
         eng.submit(Request(uid=i,
                            prompt=np.arange(5 + i, dtype=np.int32) + 1,
                            max_new_tokens=4))
     eng.run()
     assert eng.stats.prefills == 4
-    assert eng.stats.prefill_batches == 1
+    expected = 4 if cfg.arch_type in ("ssm", "hybrid") else 1
+    assert eng.stats.prefill_batches == expected
+
+
+def test_chunked_admission_zero_extra_dispatches(engine_setup):
+    """Dispatch-count regression: a long prompt arriving mid-decode is
+    admitted and chunk-refilled with ZERO host dispatches beyond the
+    megastep cadence (dispatches == megasteps; no prefill batches)."""
+    cfg, m, params = engine_setup
+    eng = ServingEngine(m, params, slots=2, max_len=96, megastep_k=8,
+                        prefill_chunk=8)
+    eng.submit(Request(uid=0, prompt=np.arange(4, dtype=np.int32) + 1,
+                       max_new_tokens=24))
+    eng.step()                     # slot 0 is now mid-decode
+    long_p = (np.arange(40) % (cfg.vocab_size - 1) + 1).astype(np.int32)
+    req = Request(uid=1, prompt=long_p, max_new_tokens=4)
+    eng.submit(req)
+    eng.run()
+    assert req.done
+    assert req.output == m.reference_decode(params, long_p, 4,
+                                            max_len=96)
+    assert eng.stats.prefill_batches == 0          # no stall dispatches
+    assert eng.stats.inscan_admissions == 2
+    assert eng.stats.chunk_refills >= 1            # 40 > prefill_chunk=8
 
 
 def test_planner_picks_megastep_k():
     """Dispatch-overhead napkin math: K grows as the device step
-    shrinks relative to the launch cost, and the analytic serving
-    model predicts the amortization win."""
-    from repro.core import (a17_cpu, choose_megastep_k, simulate_megastep)
+    shrinks relative to the launch cost, the analytic serving model
+    predicts the amortization win, and mixed-load admission planning
+    picks chunked admission exactly when stalls cost more than riding."""
+    from repro.core import (a17_cpu, choose_megastep_k, megastep_time,
+                            simulate_admission, simulate_megastep)
     hw = a17_cpu(2)
     assert choose_megastep_k(hw, step_s=1.0) == 1       # step ≫ dispatch
     assert choose_megastep_k(hw, step_s=1e-5) > 1       # dispatch-bound
     assert choose_megastep_k(hw, step_s=0.0) == 1
+    # mixed load: frequent arrivals cap K (admission waits on the scan)
+    k_idle = choose_megastep_k(hw, step_s=1e-5)
+    k_busy = choose_megastep_k(hw, step_s=1e-5, arrival_rate_per_s=1e4)
+    assert 1 <= k_busy < k_idle
+
     ks = (1, 4, 8, 16)
     from repro.configs.paper_models import PAPER_MODELS
     import dataclasses as dc
+    llama = PAPER_MODELS["llama3.2-1b"]
     fast = dc.replace(hw, dispatch_overhead_s=5e-3)     # dispatch-bound
-    r = simulate_megastep(PAPER_MODELS["llama3.2-1b"], fast, ks=ks)
+    r = simulate_megastep(llama, fast, ks=ks)
     tps = [r[k].tokens_per_s for k in ks]
     assert tps == sorted(tps) and tps[-1] > tps[0]
 
+    # donated carries: the un-donated boundary copy costs throughput
+    t_d = megastep_time(1e-4, hw, 8, carry_bytes=1e9, donate_carries=True)
+    t_n = megastep_time(1e-4, hw, 8, carry_bytes=1e9,
+                        donate_carries=False)
+    assert t_d < t_n
+    r_nd = simulate_megastep(llama, fast, ks=(8,), donate_carries=False)
+    assert r_nd[8].tokens_per_s < r[8].tokens_per_s
 
-def test_sliding_window_archs_serve(engine_setup):
-    """Hybrid (window) and ssm archs run the engine end-to-end."""
-    for arch in ("recurrentgemma-2b", "mamba2-2.7b"):
-        cfg = reduced(get_config(arch))
-        m = Model(cfg)
-        params = m.init(jax.random.PRNGKey(0))
-        eng = ServingEngine(m, params, slots=2, max_len=96)
-        for i in range(3):
-            eng.submit(Request(uid=i,
-                               prompt=np.arange(6, dtype=np.int32) + 1,
-                               max_new_tokens=5))
-        eng.run()
-        assert eng.stats.tokens_generated >= 15
+    # admission planning: dispatch-dominated admission-heavy traffic
+    # (short prompts, unbatched stalls, short generations) → chunked
+    # wins; cheap dispatch + very long prompts + perfect bucketing →
+    # stall wins (one fused prefill pass beats 4096 rider substeps)
+    heavy = dc.replace(hw, dispatch_overhead_s=5e-2)
+    adm = simulate_admission(llama, heavy, k=8, batch=8, prompt_len=4,
+                             max_new=8, prefill_bucket=1)
+    assert adm["chunked"].tokens_per_s > 1.1 * adm["stall"].tokens_per_s
+    cheap = dc.replace(hw, dispatch_overhead_s=1e-7)
+    adm2 = simulate_admission(llama, cheap, k=8, batch=4,
+                              prompt_len=4096, max_new=8,
+                              prefill_bucket=4)
+    assert adm2["stall"].tokens_per_s > adm2["chunked"].tokens_per_s
+
+
+def test_plan_decode_sets_admission_and_donation():
+    """The hardware-aware plan carries the serving-loop decisions."""
+    from repro.core import TPU_V5E, plan
+    from repro.configs.base import INPUT_SHAPES
+    cfg = get_config("deepseek-7b")
+    p = plan(cfg, INPUT_SHAPES["decode_32k"], TPU_V5E,
+             avg_prompt_len=32)
+    assert p.megastep_k >= 1
+    assert p.admission in ("chunked", "stall")
+    assert p.donate_carries
+    assert "admission=" in p.summary()
