@@ -1,7 +1,7 @@
 """End-to-end serving benchmark: the ServingEngine decoding batched
 requests on a reduced model (live execution).
 
-Two sweeps:
+Three sweeps (``--sweep megastep|mixed|precision|all``):
 
 1. **Megastep sweep** — ``K ∈ {1, 4, 8, 16}``, all requests queued
    upfront (stall admission, the PR-1 configuration): K=1 reproduces
@@ -17,24 +17,39 @@ Two sweeps:
    sustained-load studies (arXiv:2410.03613) put the on-device
    collapse — and where the dispatch-overhead lesson says chunked
    admission must win decode-phase tokens/s.
+3. **Precision sweep** — {bf16, q8_0, q4_0} × K ∈ {1, 8} serving
+   decode, the paper's §5.3 quantization table reproduced through the
+   megastep engine. The JSON's ``precision`` section is the live
+   counterpart of the paper's F16/Q8_0/Q4_0 throughput columns: per
+   (format, K) decode-phase tok/s, the q4_0/bf16 ratio at K=8, the
+   measured weight-bytes ratio (paper fn.1: Q4_0 = 4.5 bits/weight),
+   and the analytic prediction from
+   ``core.scheduler.simulate_precision`` (the memory-roofline §5.3
+   model) next to the measurement — when the backend's dequant path
+   inverts the predicted ordering, that gap is the recorded finding
+   (see ROADMAP.md).
 
 Emits ``BENCH_serving.json`` at the repo root (tok/s per K, the K8/K1
-speedup, the chunked/stall mixed-workload ratio + greedy equivalence
-bits) so future PRs have a perf trajectory to regress against.
+speedup, the chunked/stall mixed-workload ratio, the precision table +
+greedy equivalence bits) so future PRs have a perf trajectory to
+regress against. Sections are merged into an existing file, so running
+one sweep never clobbers another's numbers.
 """
 from __future__ import annotations
 
+import argparse
 import collections
 import json
 import pathlib
 import time
-from typing import List, Tuple
+from typing import Dict, List, Sequence, Tuple
 
 import jax
 import numpy as np
 
 from repro.configs import get_config, reduced
 from repro.models import Model
+from repro.quant.quantize import QuantizedTensor
 from repro.serving import Request, SamplingConfig, ServingEngine
 
 KS = (1, 4, 8, 16)
@@ -42,6 +57,17 @@ N_REQUESTS = 32
 MAX_NEW = 48
 SLOTS = 4
 REPS = 3
+
+# precision sweep: the §5.3 ladder through the serving engine; K=1
+# isolates per-dispatch cost per format, K=8 is the amortized serving
+# operating point where the memory-roofline win should show. Workload
+# matches the megastep sweep (the timed decode region must be long
+# enough to dominate scheduler noise on a shared container).
+PRECISIONS = ("bf16", "q8_0", "q4_0")
+PREC_KS = (1, 8)
+PREC_REQUESTS = 32
+PREC_MAX_NEW = 48
+PREC_REPS = 3
 
 # mixed workload: admission-heavy traffic (short prompts, short
 # generations, ~2 arrivals per megastep → every megastep boundary has
@@ -53,15 +79,15 @@ MIX_K = 8
 MIX_REPS = 5
 
 
-def _requests():
+def _requests(n: int = N_REQUESTS, max_new: int = MAX_NEW):
     return [Request(uid=i, prompt=np.arange(5 + i % 8, dtype=np.int32) + 1,
-                    max_new_tokens=MAX_NEW) for i in range(N_REQUESTS)]
+                    max_new_tokens=max_new) for i in range(n)]
 
 
-def _pass(engine):
+def _pass(engine, n: int = N_REQUESTS, max_new: int = MAX_NEW):
     """One full pass over the standard workload. Returns (end-to-end
     wall, decode-phase wall, decode tokens, total tokens, outputs)."""
-    reqs = _requests()
+    reqs = _requests(n, max_new)
     for r in reqs:
         engine.submit(r)
     tokens0 = engine.stats.tokens_generated
@@ -119,7 +145,7 @@ def _run_mixed(engine, cfg, seed: int = 0):
         [r.output for r in reqs]
 
 
-def run() -> List[Tuple[str, float, str]]:
+def _build_model():
     # batch-1-style decode on a small model is the dispatch-bound regime
     # the paper's §5 measures; keep the device step small so the sweep
     # exposes the launch-overhead amortization rather than raw FLOPs
@@ -128,7 +154,110 @@ def run() -> List[Tuple[str, float, str]]:
                   unroll_scans=True)   # 2 layers: unroll beats while-loop
     model = Model(cfg)
     params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
 
+
+def _param_bytes(params) -> int:
+    total = 0
+    for leaf in jax.tree_util.tree_leaves(
+            params, is_leaf=lambda x: isinstance(x, QuantizedTensor)):
+        if isinstance(leaf, QuantizedTensor):
+            total += leaf.quant_nbytes
+        else:
+            total += leaf.size * leaf.dtype.itemsize
+    return total
+
+
+def _sweep_precision(cfg, model, params, out, rows) -> None:
+    """{bf16, q8_0, q4_0} × K ∈ {1, 8} through the megastep engine —
+    the paper's §5.3 precision table as a serving measurement."""
+    from repro.quant.quantize import quantize_tree
+    # quantize once per format; every engine of that format shares the
+    # tree (the engine's matching-policy path is a no-op)
+    params_by_fmt = {
+        fmt: (params if fmt == "bf16"
+              else quantize_tree(params, fmt, cfg.quant_group))
+        for fmt in PRECISIONS}
+    engines = {
+        (fmt, k): ServingEngine(model, params_by_fmt[fmt], slots=SLOTS,
+                                max_len=64,
+                                sampling=SamplingConfig(),  # greedy
+                                megastep_k=k, admission="stall",
+                                megastep_unroll=True, quant_policy=fmt)
+        for fmt in PRECISIONS for k in PREC_KS}
+    # best-of per metric independently (same methodology as the
+    # megastep sweep: a rep with the best decode phase may have a
+    # noisy prefill phase and vice versa)
+    best_dt = {key: float("inf") for key in engines}
+    best_dec = {key: float("inf") for key in engines}
+    tokens, dec_tokens, outputs = {}, {}, {}
+    for key, eng in engines.items():             # untimed: compilation
+        _pass(eng, PREC_REQUESTS, PREC_MAX_NEW)
+        eng.reset()
+    for _ in range(PREC_REPS):                   # interleave reps so
+        for key, eng in engines.items():         # load hits all alike
+            dt, dec_dt, dec_tokens[key], tokens[key], outputs[key] = \
+                _pass(eng, PREC_REQUESTS, PREC_MAX_NEW)
+            best_dt[key] = min(best_dt[key], dt)
+            best_dec[key] = min(best_dec[key], dec_dt)
+            eng.reset()
+
+    bf16_bytes = _param_bytes(params)
+    formats: Dict[str, Dict] = {}
+    for fmt in PRECISIONS:
+        per_k = {}
+        for k in PREC_KS:
+            key = (fmt, k)
+            per_k[f"k{k}"] = {
+                "decode_tok_s": round(dec_tokens[key] / best_dec[key], 1),
+                "tok_s": round(tokens[key] / best_dt[key], 1),
+                "decode_wall_s": round(best_dec[key], 4),
+                "tokens": tokens[key],
+            }
+        qbytes = _param_bytes(params_by_fmt[fmt])
+        formats[fmt] = {
+            **per_k,
+            "weight_bytes": qbytes,
+            "weight_bytes_ratio": round(qbytes / bf16_bytes, 3),
+            # greedy K-invariance must hold *within* a format (the
+            # engine contract); tokens may differ across formats
+            "greedy_equiv_k8_k1":
+                outputs[(fmt, 1)] == outputs[(fmt, 8)],
+        }
+
+    q4 = formats["q4_0"]["k8"]["decode_tok_s"]
+    b16 = formats["bf16"]["k8"]["decode_tok_s"]
+
+    # analytic twin: the §5.3 memory-roofline prediction for the same
+    # sweep on the paper's 2-thread A17 CPU operating point
+    from repro.core import a17_cpu, simulate_precision
+    sim = simulate_precision(cfg, a17_cpu(2), kv_len=48,
+                             formats=PRECISIONS, ks=PREC_KS)
+    analytic = {fmt: {f"k{k}": round(sim[fmt][k].tokens_per_s, 1)
+                      for k in PREC_KS} for fmt in PRECISIONS}
+
+    out["precision"] = {
+        "requests": PREC_REQUESTS, "max_new": PREC_MAX_NEW,
+        "slots": SLOTS, "sampling": "greedy", "admission": "stall",
+        "formats": formats,
+        "q4_over_bf16_k8_decode": round(q4 / b16, 2),
+        "q8_over_bf16_k8_decode": round(
+            formats["q8_0"]["k8"]["decode_tok_s"] / b16, 2),
+        "analytic_a17_2t": {
+            **analytic,
+            "q4_over_f16_k8": round(
+                analytic["q4_0"]["k8"] / analytic["bf16"]["k8"], 2)},
+    }
+    rows.append((
+        "serving/precision_q4_over_bf16_k8", q4 / b16 * 100,
+        f"q4_0 {q4:.0f} vs bf16 {b16:.0f} decode tok/s at K=8 "
+        f"(= {q4 / b16:.2f}x; analytic a17-2t predicts "
+        f"{out['precision']['analytic_a17_2t']['q4_over_f16_k8']:.2f}x; "
+        f"weight bytes ratio "
+        f"{formats['q4_0']['weight_bytes_ratio']:.3f})"))
+
+
+def _sweep_megastep(cfg, model, params, out, rows) -> None:
     engines = {k: ServingEngine(model, params, slots=SLOTS, max_len=64,
                                 sampling=SamplingConfig(),  # greedy →
                                 megastep_k=k,               # comparable
@@ -147,7 +276,6 @@ def run() -> List[Tuple[str, float, str]]:
             best[k] = min(best[k], dt)
             best_dec[k] = min(best_dec[k], dec_dt)
 
-    rows = []
     per_k = {}
     for k in KS:
         dt, dec_dt = best[k], best_dec[k]
@@ -171,7 +299,22 @@ def run() -> List[Tuple[str, float, str]]:
 
     speedup = per_k[8]["decode_tok_s"] / per_k[1]["decode_tok_s"]
     equiv = outputs[8] == outputs[1]
+    out.update({
+        "bench": "serving_megastep_sweep",
+        "model": "deepseek-7b reduced (2L, d64, ff128, v256)",
+        "slots": SLOTS, "requests": N_REQUESTS, "max_new": MAX_NEW,
+        "sampling": "greedy",
+        "per_k": {str(k): v for k, v in per_k.items()},
+        "k8_over_k1_decode": round(speedup, 2),
+        "k8_over_k1_e2e": round(per_k[8]["tok_s"] / per_k[1]["tok_s"], 2),
+        "greedy_equiv_k8_k1": equiv,
+    })
+    rows.append(("serving/k8_over_k1_speedup", speedup * 100,
+                 f"K=8 {speedup:.2f}x over K=1 (decode phase); greedy "
+                 f"token-identical: {equiv}"))
 
+
+def _sweep_mixed(cfg, model, params, out, rows) -> None:
     # -- mixed prefill/decode workload: stall vs chunked admission -------
     mix_engines = {
         mode: ServingEngine(model, params, slots=SLOTS, max_len=64,
@@ -204,36 +347,58 @@ def run() -> List[Tuple[str, float, str]]:
         mixed["stall"]["decode_tok_s"]
     mix_equiv = mix_outputs["chunked"] == mix_outputs["stall"]
 
-    out = {
-        "bench": "serving_megastep_sweep",
-        "model": "deepseek-7b reduced (2L, d64, ff128, v256)",
-        "slots": SLOTS, "requests": N_REQUESTS, "max_new": MAX_NEW,
-        "sampling": "greedy",
-        "per_k": {str(k): v for k, v in per_k.items()},
-        "k8_over_k1_decode": round(speedup, 2),
-        "k8_over_k1_e2e": round(per_k[8]["tok_s"] / per_k[1]["tok_s"], 2),
-        "greedy_equiv_k8_k1": equiv,
-        "mixed_workload": {
-            "requests": MIX_REQUESTS, "max_new": MIX_MAX_NEW,
-            "megastep_k": MIX_K, "slots": SLOTS,
-            "arrivals": "seeded poisson-ish, gap 0-1 steps, "
-                        "prompts 3-13 tokens",
-            **{mode: mixed[mode] for mode in ("stall", "chunked")},
-            "chunked_over_stall_decode": round(mix_ratio, 2),
-            "greedy_equiv_chunked_stall": mix_equiv,
-        },
+    out["mixed_workload"] = {
+        "requests": MIX_REQUESTS, "max_new": MIX_MAX_NEW,
+        "megastep_k": MIX_K, "slots": SLOTS,
+        "arrivals": "seeded poisson-ish, gap 0-1 steps, "
+                    "prompts 3-13 tokens",
+        **{mode: mixed[mode] for mode in ("stall", "chunked")},
+        "chunked_over_stall_decode": round(mix_ratio, 2),
+        "greedy_equiv_chunked_stall": mix_equiv,
     }
-    path = pathlib.Path(__file__).resolve().parents[1] / \
-        "BENCH_serving.json"
-    path.write_text(json.dumps(out, indent=2) + "\n")
-    rows.append(("serving/k8_over_k1_speedup", speedup * 100,
-                 f"K=8 {speedup:.2f}x over K=1 (decode phase); greedy "
-                 f"token-identical: {equiv}"))
     rows.append((
         "serving/chunked_over_stall_mixed", mix_ratio * 100,
         f"mixed workload: chunked admission {mix_ratio:.2f}x over "
         f"stall-prefill decode-phase tok/s "
         f"({mixed['chunked']['dispatches']} vs "
         f"{mixed['stall']['dispatches']} dispatches); greedy "
-        f"token-identical: {mix_equiv}; wrote {path.name}"))
+        f"token-identical: {mix_equiv}"))
+
+
+_SWEEPS = ("megastep", "mixed", "precision")
+
+
+def run(sweeps: Sequence[str] = _SWEEPS) -> List[Tuple[str, float, str]]:
+    cfg, model, params = _build_model()
+    path = pathlib.Path(__file__).resolve().parents[1] / \
+        "BENCH_serving.json"
+    # merge into the existing file so a single-sweep run never clobbers
+    # the other sections' numbers
+    out = json.loads(path.read_text()) if path.exists() else {}
+    rows: List[Tuple[str, float, str]] = []
+    if "megastep" in sweeps:
+        _sweep_megastep(cfg, model, params, out, rows)
+    if "mixed" in sweeps:
+        _sweep_mixed(cfg, model, params, out, rows)
+    if "precision" in sweeps:
+        _sweep_precision(cfg, model, params, out, rows)
+    path.write_text(json.dumps(out, indent=2) + "\n")
+    rows.append(("serving/bench_json", 0.0,
+                 f"wrote {path.name} sections: {', '.join(sweeps)}"))
     return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--sweep", default="all",
+                    choices=list(_SWEEPS) + ["all"],
+                    help="which sweep to run (default: all)")
+    args = ap.parse_args()
+    sweeps = _SWEEPS if args.sweep == "all" else (args.sweep,)
+    print("name,us_per_call,derived")
+    for name, us, derived in run(sweeps):
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

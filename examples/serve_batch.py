@@ -3,7 +3,7 @@ load (or train-then-quantize) a small model and serve a stream of
 requests through the continuous-batching engine at Q8/Q4 — the paper's
 precision sweep as a deployment decision.
 
-  PYTHONPATH=src python examples/serve_batch.py --precision q4_0
+  PYTHONPATH=src python examples/serve_batch.py --quant q4_0
 """
 import argparse
 import time
@@ -14,15 +14,16 @@ import numpy as np
 
 from repro.configs import get_config, reduced
 from repro.models import Model
-from repro.quant import quantize_tree
 from repro.serving import Request, SamplingConfig, ServingEngine
 import dataclasses
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--precision", default="q8_0",
-                    choices=["bf16", "q8_0", "q4_0"])
+    ap.add_argument("--quant", "--precision", dest="quant",
+                    default="q8_0", choices=["bf16", "q8_0", "q4_0"],
+                    help="serving weight precision (paper §5.3; "
+                         "--precision kept as a back-compat alias)")
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--requests", type=int, default=12)
     ap.add_argument("--max-new", type=int, default=24)
@@ -30,17 +31,18 @@ def main() -> None:
 
     cfg = reduced(get_config("mistral-nemo-12b"), num_layers=4,
                   d_model=256, d_ff=512)
-    model_cfg = dataclasses.replace(cfg, quant_policy=args.precision)
+    model_cfg = dataclasses.replace(cfg, quant_policy=args.quant)
     model = Model(model_cfg)
     params = model.init(jax.random.PRNGKey(0), quantize=False)
-    if args.precision != "bf16":
-        params = quantize_tree(params, args.precision)
-        print(f"quantized weights to {args.precision} "
+    if args.quant != "bf16":
+        print(f"serving with {args.quant} weights "
               f"(paper: Q4 = 4.5 bits/weight)")
 
+    # the engine quantizes the weight pytree on entry per quant_policy
     engine = ServingEngine(model, params, slots=args.slots, max_len=256,
                            sampling=SamplingConfig(temperature=0.7,
-                                                   top_k=40))
+                                                   top_k=40),
+                           quant_policy=args.quant)
     rng = np.random.default_rng(0)
     reqs = [Request(uid=i,
                     prompt=rng.integers(1, cfg.vocab_size,

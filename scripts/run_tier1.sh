@@ -1,7 +1,10 @@
 #!/usr/bin/env bash
 # Tier-1 verification wrapper: the full pytest suite (including the
 # serving property suite, tests/test_serving_properties.py) with a
-# pinned hypothesis seed/profile so runs are deterministic in CI.
+# pinned hypothesis seed/profile so runs are deterministic in CI —
+# followed by a seeded q4_0 quantized-serving smoke and a schema check
+# of the committed BENCH_serving.json (the precision section must be
+# present: benchmarks/serving_bench.py --sweep precision writes it).
 #
 # With hypothesis installed, tests/_hypothesis_compat.py loads a
 # derandomized profile; without it (this container), the compat shim's
@@ -17,4 +20,52 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 export REPRO_HYP_SEED="${REPRO_HYP_SEED:-0}"
 export REPRO_PALLAS_INTERPRET="${REPRO_PALLAS_INTERPRET:-1}"
 
-exec python -m pytest -x -q "$@"
+python -m pytest -x -q "$@"
+
+echo "[tier1] q4_0 quantized-serving smoke (seeded)"
+python - <<'EOF'
+import jax, numpy as np
+from repro.configs import get_config, reduced
+from repro.models import Model
+from repro.serving import Request, ServingEngine
+
+cfg = reduced(get_config("deepseek-7b"), d_model=64, d_ff=128,
+              vocab_size=256, num_heads=2, num_kv_heads=1)
+m = Model(cfg)
+params = m.init(jax.random.PRNGKey(0))
+eng = ServingEngine(m, params, slots=2, max_len=64, megastep_k=4,
+                    quant_policy="q4_0")
+rng = np.random.default_rng(0)
+reqs = [Request(uid=i,
+                prompt=rng.integers(1, cfg.vocab_size, size=5).astype(np.int32),
+                max_new_tokens=6) for i in range(3)]
+for r in reqs:
+    eng.submit(r)
+eng.run()
+for r in reqs:
+    assert r.done, r.uid
+    ref = m.reference_decode(eng.params, r.prompt, r.max_new_tokens)
+    assert r.output == ref, (r.uid, r.output, ref)
+print(f"[tier1] q4_0 smoke OK: {len(reqs)} requests token-identical "
+      f"to the quantized reference")
+EOF
+
+echo "[tier1] BENCH_serving.json schema check"
+python - <<'EOF'
+import json, pathlib
+bench = json.loads(pathlib.Path("BENCH_serving.json").read_text())
+for key in ("per_k", "k8_over_k1_decode", "mixed_workload", "precision"):
+    assert key in bench, f"BENCH_serving.json missing section: {key}"
+prec = bench["precision"]
+for key in ("formats", "q4_over_bf16_k8_decode", "analytic_a17_2t"):
+    assert key in prec, f"precision section missing key: {key}"
+for fmt in ("bf16", "q8_0", "q4_0"):
+    assert fmt in prec["formats"], f"precision.formats missing {fmt}"
+    for k in ("k1", "k8"):
+        row = prec["formats"][fmt][k]
+        assert "decode_tok_s" in row and row["decode_tok_s"] > 0, (fmt, k)
+    assert prec["formats"][fmt]["greedy_equiv_k8_k1"] is True, \
+        f"{fmt}: greedy K-invariance broken"
+print("[tier1] BENCH_serving.json schema OK "
+      f"(q4/bf16 @K8 decode = {prec['q4_over_bf16_k8_decode']})")
+EOF

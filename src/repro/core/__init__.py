@@ -10,12 +10,13 @@
 from repro.core.graph import Graph, Node, Op, build_decoder_graph
 from repro.core.scheduler import (
     find_concurrent_gemms, fusion_plan, simulate_version,
-    simulate_megastep, simulate_admission, backend_throughput,
+    simulate_megastep, simulate_admission, simulate_precision,
+    backend_throughput,
 )
 from repro.core.cost_model import (
     HardwareSpec, TPU_V5E, A17_GPU, a17_cpu, roofline, RooflineTerms,
     model_flops, megastep_time, megastep_tokens_per_s,
-    decode_carry_bytes,
+    decode_carry_bytes, quantized_per_token_s,
 )
 from repro.core.profiler import profile_graph, profile_phases
 from repro.core.dispatch import plan, ExecutionPlan, choose_megastep_k
@@ -24,10 +25,12 @@ from repro.core.precision import get_format, PrecisionFormat
 __all__ = [
     "Graph", "Node", "Op", "build_decoder_graph",
     "find_concurrent_gemms", "fusion_plan", "simulate_version",
-    "simulate_megastep", "simulate_admission", "backend_throughput",
+    "simulate_megastep", "simulate_admission", "simulate_precision",
+    "backend_throughput",
     "HardwareSpec", "TPU_V5E", "A17_GPU", "a17_cpu", "roofline",
     "RooflineTerms", "model_flops", "megastep_time",
     "megastep_tokens_per_s", "decode_carry_bytes",
+    "quantized_per_token_s",
     "profile_graph", "profile_phases",
     "plan", "ExecutionPlan", "choose_megastep_k",
     "get_format", "PrecisionFormat",

@@ -20,6 +20,7 @@ import math
 from typing import Dict, List, Optional, Tuple
 
 from repro.core.graph import Graph, Node, Op
+from repro.core.precision import get_format
 
 
 @dataclasses.dataclass(frozen=True)
@@ -231,9 +232,39 @@ def decode_carry_bytes(cfg, batch: int, kv_len: int,
                  * dtype_bytes)
 
 
+def quantized_per_token_s(per_token_s: float, hw: HardwareSpec,
+                          weight_bytes: float = 0.0,
+                          weight_format: str = "bf16") -> float:
+    """Adjust a bf16-calibrated per-token decode time for a weight
+    precision (paper §5.3: quantization is the single largest lever
+    because decode GEMVs are weight-stream-bound).
+
+    ``weight_bytes`` is the bf16 footprint of the weights streamed per
+    token. Two precision terms move: the stream shrinks by
+    ``bits_per_weight / 16`` (the memory-roofline win) and the
+    in-kernel dequant adds ``dequant_flops_per_weight`` per weight (the
+    NEON/VREG widen+scale cost — what erodes the Q4 win as models grow,
+    Fig 4e). The subtraction is clamped at zero: this helper cannot see
+    the compute/memory split inside ``per_token_s``, so a caller whose
+    step is not weight-stream-dominated should pass only the weight
+    share of the stream as ``weight_bytes`` (or use the graph-level
+    ``scheduler.simulate_precision``, which models the split).
+    """
+    if not weight_bytes or weight_format in ("bf16", "f16", "f32"):
+        return per_token_s
+    fmt = get_format(weight_format)
+    saved = weight_bytes * (1.0 - fmt.stream_ratio) \
+        / (hw.mem_bw * hw.mem_efficiency)
+    dequant = fmt.dequant_flops_per_weight * (weight_bytes / 2.0) \
+        / (hw.peak_flops * hw.flop_efficiency)
+    return max(per_token_s - saved, 0.0) + dequant
+
+
 def megastep_time(per_token_s: float, hw: HardwareSpec, k: int = 1, *,
                   carry_bytes: float = 0.0,
-                  donate_carries: bool = True) -> float:
+                  donate_carries: bool = True,
+                  weight_bytes: float = 0.0,
+                  weight_format: str = "bf16") -> float:
     """Wall time of one K-token serving megastep: one host dispatch +
     K device-resident decode iterations. The per-token dispatch share
     ``dispatch_overhead_s / k`` is the lever the paper's §5 CPU-vs-GPU
@@ -245,7 +276,13 @@ def megastep_time(per_token_s: float, hw: HardwareSpec, k: int = 1, *,
     dispatch); with ``donate_carries`` the update is in place and the
     boundary term vanishes — halving the carry's HBM traffic, which is
     why the serving engine donates (``jit(..., donate_argnums)``).
+
+    ``weight_bytes`` / ``weight_format`` fold the precision dimension
+    into the same napkin math (see :func:`quantized_per_token_s`):
+    a Q4 megastep streams 4.5/16 of the bf16 weight bytes per token.
     """
+    per_token_s = quantized_per_token_s(per_token_s, hw, weight_bytes,
+                                        weight_format)
     boundary = 0.0 if donate_carries else \
         carry_bytes / (hw.mem_bw * hw.mem_efficiency)
     return hw.dispatch_overhead_s + boundary + k * per_token_s
@@ -253,10 +290,14 @@ def megastep_time(per_token_s: float, hw: HardwareSpec, k: int = 1, *,
 
 def megastep_tokens_per_s(per_token_s: float, hw: HardwareSpec,
                           k: int = 1, *, carry_bytes: float = 0.0,
-                          donate_carries: bool = True) -> float:
+                          donate_carries: bool = True,
+                          weight_bytes: float = 0.0,
+                          weight_format: str = "bf16") -> float:
     return tokens_per_second(
         megastep_time(per_token_s, hw, k, carry_bytes=carry_bytes,
-                      donate_carries=donate_carries), k)
+                      donate_carries=donate_carries,
+                      weight_bytes=weight_bytes,
+                      weight_format=weight_format), k)
 
 
 # ---------------------------------------------------------------------------
@@ -306,7 +347,9 @@ class RooflineTerms:
 def roofline(hlo_flops: float, hlo_bytes: float, collective_bytes: float,
              chips: int, hw: HardwareSpec = TPU_V5E,
              links_per_chip: int = 1,
-             steps_per_dispatch: int = 0) -> RooflineTerms:
+             steps_per_dispatch: int = 0,
+             weight_hlo_bytes: float = 0.0,
+             weight_format: str = "bf16") -> RooflineTerms:
     """The brief's three terms, plus an optional dispatch term.
 
     FLOPs/bytes from ``compiled.cost_analysis()`` are *per device* under
@@ -314,13 +357,25 @@ def roofline(hlo_flops: float, hlo_bytes: float, collective_bytes: float,
     ``steps_per_dispatch`` > 0 adds the serving-loop host-launch cost
     amortized over a K-token megastep (K=1 → the paper's losing
     per-token-dispatch configuration).
+
+    ``weight_hlo_bytes`` (the bf16 weight share of ``hlo_bytes``) and
+    ``weight_format`` rescale the weight stream by
+    ``bits_per_weight / 16`` and add the in-kernel dequant FLOPs —
+    the paper's §5.3 quantization lever as a roofline term, so an
+    analysis of a bf16-compiled HLO can predict its Q8/Q4 serving
+    variant without recompiling.
     """
+    mem_bytes, flops = hlo_bytes, hlo_flops
+    if weight_hlo_bytes and weight_format not in ("bf16", "f16", "f32"):
+        fmt = get_format(weight_format)
+        mem_bytes -= weight_hlo_bytes * (1.0 - fmt.stream_ratio)
+        flops += fmt.dequant_flops_per_weight * (weight_hlo_bytes / 2.0)
     return RooflineTerms(
-        compute_s=hlo_flops / hw.peak_flops,
-        memory_s=hlo_bytes / hw.mem_bw,
+        compute_s=flops / hw.peak_flops,
+        memory_s=mem_bytes / hw.mem_bw,
         collective_s=collective_bytes / (hw.link_bw * links_per_chip),
-        hlo_flops=hlo_flops,
-        hlo_bytes=hlo_bytes,
+        hlo_flops=flops,
+        hlo_bytes=mem_bytes,
         collective_bytes=collective_bytes,
         chips=chips,
         dispatch_s=(hw.dispatch_overhead_s / steps_per_dispatch

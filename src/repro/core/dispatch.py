@@ -59,19 +59,20 @@ class ExecutionPlan:
     # (jit donate_argnums): in-place carry update, ~half the carry's
     # HBM traffic at each dispatch boundary
     donate_carries: bool = True
+    # serving weight precision: the coarsest format any memory-bound
+    # GEMM requested, cross-checked against the analytic precision
+    # sweep (scheduler.simulate_precision) — the paper's §5.3 F16-vs-Q4
+    # decision, emitted as a first-class plan field the engine consumes
+    # (ServingEngine(quant_policy=...))
+    quant_policy: str = "bf16"
 
     def config_overrides(self) -> Dict:
         """Overrides to apply to the ModelConfig for this plan."""
-        # one precision for all weight GEMMs: the coarsest that any
-        # memory-bound GEMM requested (keeps a single param pytree)
-        precisions = [d.precision for d in self.decisions]
-        policy = "q4_0" if "q4_0" in precisions else (
-            "q8_0" if "q8_0" in precisions else "bf16")
         return dict(
             scheduler_version=self.scheduler_version,
             fuse_qkv=self.fuse_qkv,
             fuse_gate_up=self.fuse_gate_up,
-            quant_policy=policy,
+            quant_policy=self.quant_policy,
             use_pallas=any(d.use_pallas for d in self.decisions),
         )
 
@@ -81,7 +82,8 @@ class ExecutionPlan:
                  f"fuse_gate_up={self.fuse_gate_up} "
                  f"megastep_k={self.megastep_k} "
                  f"admission={self.admission} "
-                 f"donate={self.donate_carries}"]
+                 f"donate={self.donate_carries} "
+                 f"quant={self.quant_policy}"]
         for d in self.decisions:
             lines.append(
                 f"  {d.tag:<10} AI={d.arithmetic_intensity:9.1f} "
@@ -120,8 +122,10 @@ def plan(cfg: ModelConfig, shape: InputShape,
         bound = "memory" if ai < ridge else "compute"
         if bound == "memory" and allow_quant:
             # memory-bound: cut weight bytes as low as quality allows
-            precision = "q4_0" if quality_floor_bits <= 4.5 else "q8_0"
-            use_pallas = True    # dequant must happen in-kernel (VMEM)
+            # (a floor above 8.5 bits rules out both k-quants → bf16)
+            precision = ("q4_0" if quality_floor_bits <= 4.5 else
+                         "q8_0" if quality_floor_bits <= 8.5 else "bf16")
+            use_pallas = precision != "bf16"  # in-kernel (VMEM) dequant
             reason = f"AI {ai:.0f} < ridge {ridge:.0f}: weight-bound GEMV"
         else:
             precision = "bf16"
@@ -134,6 +138,12 @@ def plan(cfg: ModelConfig, shape: InputShape,
     # Fusion: always beneficial on TPU (fewer kernels, bigger GEMMs);
     # on mobile it is the paper's V1. Disabled only for v0 studies.
     version = "v2" if hw.link_bw or hw.name.startswith("tpu") else "v2"
+
+    # One precision for all weight GEMMs: the coarsest that any
+    # memory-bound GEMM requested (keeps a single param pytree).
+    precisions = [d.precision for d in decisions]
+    quant_policy = "q4_0" if "q4_0" in precisions else (
+        "q8_0" if "q8_0" in precisions else "bf16")
 
     # Decode serving loop: amortize the host dispatch over K tokens —
     # the same napkin math as the AI-vs-ridge-point rule above, applied
@@ -148,19 +158,35 @@ def plan(cfg: ModelConfig, shape: InputShape,
         # prompt in-scan unless its one-token-per-substep cost exceeds
         # the dispatch+stall cost of a dedicated prefill (long prompts
         # on compute-rich hardware).
-        from repro.core.scheduler import simulate_admission
+        from repro.core.scheduler import (simulate_admission,
+                                          simulate_precision)
         adm = simulate_admission(
             cfg, hw, k=megastep_k, batch=max(shape.global_batch, 1),
             prompt_len=avg_prompt_len or max(shape.seq_len, 1),
             max_new=max_new, kv_len=max(shape.seq_len, 1))
         if adm["stall"].tokens_per_s > adm["chunked"].tokens_per_s:
             admission = "stall"
+        if allow_quant and quant_policy != "bf16":
+            # Cross-check the per-GEMM choice against the analytic
+            # precision sweep: pick the fastest quality-allowed format
+            # at the chosen K (the §5.3 tradeoff — the dequant tax can
+            # hand the win back to Q8/F16 on compute-poor hardware).
+            allowed = ["f16"] + [f for f in ("q8_0", "q4_0")
+                                 if get_format(f).bits_per_weight
+                                 >= quality_floor_bits]
+            sweep = simulate_precision(
+                cfg, hw, kv_len=max(shape.seq_len, 1),
+                batch=max(shape.global_batch, 1), formats=allowed,
+                ks=(megastep_k,))
+            best = max(allowed,
+                       key=lambda f: sweep[f][megastep_k].tokens_per_s)
+            quant_policy = "bf16" if best == "f16" else best
     return ExecutionPlan(
         arch=cfg.name, shape=shape.name, hardware=hw.name,
         scheduler_version=version, fuse_qkv=True,
         fuse_gate_up=cfg.glu, decisions=decisions,
         megastep_k=megastep_k, admission=admission,
-        donate_carries=True)
+        donate_carries=True, quant_policy=quant_policy)
 
 
 def choose_megastep_k(hw: cm.HardwareSpec, step_s: float, *,

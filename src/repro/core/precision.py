@@ -28,6 +28,15 @@ class PrecisionFormat:
     def bytes_per_weight(self) -> float:
         return self.bits_per_weight / 8.0
 
+    @property
+    def stream_ratio(self) -> float:
+        """Weight-stream bytes relative to the bf16/f16 baseline —
+        the §5.3 memory-roofline lever (q8_0 → 8.5/16, q4_0 → 4.5/16).
+        This is the factor ``cost_model`` applies to the weight share
+        of a decode step's bytes when predicting a quantized serving
+        configuration from a bf16-calibrated one."""
+        return self.bits_per_weight / 16.0
+
 
 F32 = PrecisionFormat("f32", 32, 0, 0, 0.0)
 F16 = PrecisionFormat("f16", 16, 0, 0, 0.0)

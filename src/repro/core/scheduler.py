@@ -187,6 +187,34 @@ def simulate_megastep(cfg: ModelConfig,
     return out
 
 
+def simulate_precision(cfg: ModelConfig,
+                       hw: Optional[cm.HardwareSpec] = None, *,
+                       threads: int = 4, kv_len: int = 64,
+                       batch: int = 1,
+                       formats: Sequence[str] = ("f16", "q8_0", "q4_0"),
+                       ks: Sequence[int] = (1, 8),
+                       donate_carries: bool = True,
+                       ) -> Dict[str, Dict[int, VersionResult]]:
+    """Serving throughput across weight precisions × megastep K — the
+    analytic twin of ``benchmarks/serving_bench.py``'s precision sweep
+    (paper §5.3, Fig 4: F16 vs Q8_0 vs Q4_0).
+
+    Each format rebuilds the decode graph with its
+    ``bits_per_weight`` / ``dequant_flops_per_weight`` (via
+    ``core.precision``), so the prediction carries both the
+    memory-roofline win (weight stream shrinks to 8.5/16 or 4.5/16)
+    and the dequant tax that erodes it on compute-poor hardware. On a
+    memory-bound decode the ordering must come out q4_0 > q8_0 > f16 —
+    when a measured backend inverts it (e.g. XLA dequantizing in a
+    separate pass instead of in-kernel), that gap is the actionable
+    delta, not noise.
+    """
+    hw = hw or cm.a17_cpu(threads)
+    return {fmt: simulate_megastep(
+        cfg, hw, kv_len=kv_len, weight_format=fmt, batch=batch, ks=ks,
+        donate_carries=donate_carries) for fmt in formats}
+
+
 def simulate_admission(cfg: ModelConfig,
                        hw: Optional[cm.HardwareSpec] = None, *,
                        threads: int = 4, k: int = 8, batch: int = 4,

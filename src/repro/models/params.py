@@ -93,7 +93,7 @@ def match_quantized(tree, params):
     def walk(entry, p):
         if isinstance(p, QuantizedTensor):
             return QuantizedTensor(data=entry, scales=entry, fmt=p.fmt,
-                                   shape=p.shape, group=p.group)
+                                   group=p.group)
         if isinstance(p, dict):
             return {k: walk(entry[k], v) for k, v in p.items()}
         if isinstance(p, (list, tuple)):

@@ -31,22 +31,28 @@ class QuantizedTensor:
     scales: activation-dtype, shape (..., K//group, N broadcast? no:
             (..., K//group, N)) — per (group, column) scale, llama.cpp
             row-major k-quant transposed to column-major matmul layout.
+
+    The logical (unquantized) shape is *derived* from the live ``data``
+    array, never stored: a stacked (L, K, N) weight that rides through a
+    scan-over-layers loses its leading dim on the pytree children each
+    iteration, and any statically-stored shape would go stale (jit
+    transforms carry aux data through unchanged). ``shape`` /
+    ``logical_shape`` therefore always describe the tensor as it is now.
     """
     data: jax.Array
     scales: jax.Array
     fmt: str            # "q8_0" | "q4_0"
-    shape: Tuple[int, ...]   # logical (unquantized) shape (..., K, N)
     group: int = 32
 
     # -- pytree protocol -------------------------------------------------
     def tree_flatten(self):
-        return (self.data, self.scales), (self.fmt, self.shape, self.group)
+        return (self.data, self.scales), (self.fmt, self.group)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
         data, scales = children
-        fmt, shape, group = aux
-        return cls(data, scales, fmt, shape, group)
+        fmt, group = aux
+        return cls(data, scales, fmt, group)
 
     @property
     def dtype(self):
@@ -54,28 +60,30 @@ class QuantizedTensor:
 
     @property
     def logical_shape(self) -> Tuple[int, ...]:
-        """Shape derived from the *current* data/scales arrays.
-
-        The static ``shape`` field goes stale when a stacked
-        QuantizedTensor is sliced by scan-over-layers (pytree children
-        get a leading dim removed; aux data doesn't) — always use this
-        for compute."""
+        """Logical (unquantized) shape ``(..., K, N)`` derived from the
+        *current* data array — authoritative under any slicing (scan
+        over stacked layers, vmap, manual ``data[i]`` indexing)."""
         k2 = self.data.shape[-2]
         K = 2 * k2 if self.fmt == "q4_0" else k2
         return tuple(self.data.shape[:-2]) + (K, self.data.shape[-1])
 
     @property
+    def shape(self) -> Tuple[int, ...]:
+        """Alias of :attr:`logical_shape` (ndarray-duck-typed)."""
+        return self.logical_shape
+
+    @property
     def ndim(self):
-        return len(self.shape)
+        return self.data.ndim
 
     @property
     def k_axis(self) -> int:
-        return len(self.shape) - 2
+        return self.data.ndim - 2
 
     @property
     def logical_nbytes(self) -> int:
         import numpy as np
-        return int(np.prod(self.shape)) * 2
+        return int(np.prod(self.logical_shape)) * 2
 
     @property
     def quant_nbytes(self) -> int:
@@ -123,8 +131,7 @@ def quantize_q8_0(w: jax.Array, group: int = 32) -> QuantizedTensor:
     wg, scale = _group_scales(w.astype(jnp.float32), group, 127.0)
     q = jnp.clip(jnp.round(wg / scale[..., None, :]), -127, 127)
     q = q.astype(jnp.int8).reshape(w.shape)
-    return QuantizedTensor(q, scale.astype(jnp.bfloat16), "q8_0",
-                           tuple(w.shape), group)
+    return QuantizedTensor(q, scale.astype(jnp.bfloat16), "q8_0", group)
 
 
 def quantize_q4_0(w: jax.Array, group: int = 32) -> QuantizedTensor:
@@ -132,7 +139,7 @@ def quantize_q4_0(w: jax.Array, group: int = 32) -> QuantizedTensor:
     q = jnp.clip(jnp.round(wg / scale[..., None, :]), -8, 7)
     q = q.astype(jnp.int8).reshape(w.shape)
     return QuantizedTensor(pack_int4(q), scale.astype(jnp.bfloat16),
-                           "q4_0", tuple(w.shape), group)
+                           "q4_0", group)
 
 
 def quantize(w: jax.Array, fmt: str, group: int = 32):
@@ -182,4 +189,10 @@ def quantize_tree(params, fmt: str, group: int = 32,
             return quantize(leaf, fmt, group)
         return leaf
 
-    return jax.tree_util.tree_map_with_path(maybe_quant, params)
+    # is_leaf stops traversal AT QuantizedTensor nodes: without it,
+    # tree_map descends into their (data, scales) children and
+    # re-quantizes the int8 payload itself — the idempotency the
+    # isinstance() check above promises would silently never trigger
+    return jax.tree_util.tree_map_with_path(
+        maybe_quant, params,
+        is_leaf=lambda x: isinstance(x, QuantizedTensor))

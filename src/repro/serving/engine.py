@@ -62,6 +62,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import Model
+from repro.quant.quantize import QuantizedTensor, quantize_tree
 from repro.serving.sampler import SamplingConfig, sample_batched
 
 # Fallback K when the caller doesn't run the planner: one dispatch per
@@ -153,9 +154,31 @@ class ServingEngine:
                  megastep_unroll: bool = False,
                  admission: str = "chunked",
                  prefill_chunk: Optional[int] = None,
-                 donate_carries: bool = True):
+                 donate_carries: bool = True,
+                 quant_policy: Optional[str] = None):
         self.model = model
         self.cfg = model.cfg
+        # Quantization is a serving dimension (paper §5.3: Q4 halves the
+        # memory-roofline cost of the decode GEMVs). ``quant_policy``
+        # quantizes the weight pytree on entry; already-quantized leaves
+        # pass through untouched, so handing the engine pre-quantized
+        # params with a matching policy is a no-op — and a *mismatched*
+        # pre-quantized tree is rejected rather than silently served
+        # under the wrong label.
+        if quant_policy and quant_policy not in ("bf16", "f16", "f32"):
+            for leaf in jax.tree_util.tree_leaves(
+                    params,
+                    is_leaf=lambda x: isinstance(x, QuantizedTensor)):
+                if isinstance(leaf, QuantizedTensor) and \
+                        leaf.fmt != quant_policy:
+                    raise ValueError(
+                        f"params already quantized as {leaf.fmt!r}; "
+                        f"cannot serve them under quant_policy="
+                        f"{quant_policy!r} (re-quantizing int weights "
+                        "would compound error — dequantize first)")
+            params = quantize_tree(params, quant_policy,
+                                   model.cfg.quant_group)
+        self.quant_policy = quant_policy or "bf16"
         self.params = params
         self.slots = slots
         self.max_len = max_len

@@ -58,9 +58,11 @@ def _decode(obj):
                 obj["bytes"], np.dtype(obj["dtype"])).reshape(obj["shape"])
             return jnp.asarray(arr)
         if obj.get(_QT):
+            # "shape" in older checkpoints is ignored: the logical shape
+            # is derived from the decoded data array (authoritative)
             return QuantizedTensor(
                 _decode(obj["data"]), _decode(obj["scales"]), obj["fmt"],
-                tuple(obj["shape"]), obj["group"])
+                obj["group"])
         if "__list__" in obj:
             items = [_decode(v) for v in obj["__list__"]]
             return tuple(items) if obj.get("__tuple__") else items

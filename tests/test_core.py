@@ -1,4 +1,6 @@
 """Core layer: graph IR, scheduler, cost model vs the paper's numbers."""
+import dataclasses
+
 import pytest
 
 from repro.configs.paper_models import LLAMA32_1B, QWEN2_0_5B
@@ -160,3 +162,47 @@ def test_roofline_terms():
     assert t.memory_s == pytest.approx(1e11 / 819e9)
     assert t.collective_s == pytest.approx(1e9 / 50e9)
     assert t.dominant == "memory"
+
+
+def test_roofline_weight_format_rescales_stream():
+    """§5.3 as a roofline term: the bf16 weight share of hlo_bytes
+    shrinks by bits_per_weight/16 and the dequant FLOPs are charged."""
+    kw = dict(hlo_flops=1e12, hlo_bytes=1e11, collective_bytes=0.0,
+              chips=1)
+    t16 = roofline(**kw)
+    wq = 8e10  # weight share of the bytes
+    t4 = roofline(**kw, weight_hlo_bytes=wq, weight_format="q4_0")
+    t8 = roofline(**kw, weight_hlo_bytes=wq, weight_format="q8_0")
+    # q4_0 streams 4.5/16 of the weight bytes, q8_0 8.5/16
+    assert t4.hlo_bytes == pytest.approx(1e11 - wq * (1 - 4.5 / 16))
+    assert t8.hlo_bytes == pytest.approx(1e11 - wq * (1 - 8.5 / 16))
+    assert t4.memory_s < t8.memory_s < t16.memory_s
+    # dequant tax: extra flops per weight (weights = wq / 2 bytes)
+    assert t4.hlo_flops == pytest.approx(1e12 + 4.0 * wq / 2)
+    # bf16/f16 formats are the identity
+    tid = roofline(**kw, weight_hlo_bytes=wq, weight_format="bf16")
+    assert tid.memory_s == t16.memory_s and tid.hlo_flops == t16.hlo_flops
+
+
+def test_simulate_precision_and_quantized_per_token():
+    """Analytic precision sweep: the weight stream shrinks with
+    bits-per-weight, and the dequant tax can hand the ordering back
+    (the paper's Fig 4e erosion) — both visible through the model."""
+    from repro.core import (a17_cpu, quantized_per_token_s,
+                            simulate_precision)
+    from repro.configs.paper_models import PAPER_MODELS
+    hw = a17_cpu(2)
+    llama = PAPER_MODELS["llama3.2-1b"]
+    sim = simulate_precision(llama, hw, ks=(1, 8))
+    assert set(sim) == {"f16", "q8_0", "q4_0"}
+    # quantization always beats f16 on this memory-bound decode
+    for fmt in ("q8_0", "q4_0"):
+        assert sim[fmt][8].tokens_per_s > sim["f16"][8].tokens_per_s
+    # pure stream term (no dequant): monotone in bits-per-weight
+    free_flops = dataclasses.replace(hw, peak_flops=1e18)
+    t16 = quantized_per_token_s(1e-3, free_flops, 2e7, "bf16")
+    t8 = quantized_per_token_s(1e-3, free_flops, 2e7, "q8_0")
+    t4 = quantized_per_token_s(1e-3, free_flops, 2e7, "q4_0")
+    assert t4 < t8 < t16 == 1e-3
+    # the dequant tax is charged at the hardware's flop rate
+    assert quantized_per_token_s(1e-3, hw, 2e7, "q4_0") > t4

@@ -34,6 +34,56 @@ def test_quant_matmul_allclose(mkn, quant, xdtype):
                                atol=0.02 * scale, rtol=0.05)
 
 
+@pytest.mark.parametrize("m", [1, 2, 3, 4])   # decode: M = active slots
+@pytest.mark.parametrize("kn", [(32, 48),     # single group, N unaligned
+                                (96, 80),     # K, N both non-128-aligned
+                                (64, 128)])   # group boundary K
+@pytest.mark.parametrize("quant,fmt_tol",
+                         [(quantize_q8_0, 0.05), (quantize_q4_0, 0.25)])
+def test_quant_matmul_decode_shapes(m, kn, quant, fmt_tol):
+    """Serving decode GEMVs: tiny M (one row per active slot),
+    group-boundary and non-128-aligned K/N. Checked two ways: against
+    the dequantize+einsum reference (near-exact — the kernel performs
+    the same dequant arithmetic in f32) and against the *unquantized*
+    matmul with per-format tolerances (the §5.3 quality cost)."""
+    K, N = kn
+    k1, k2 = jax.random.split(jax.random.PRNGKey(7))
+    x = jax.random.normal(k1, (m, K), jnp.float32)
+    wf = jax.random.normal(k2, (K, N), jnp.float32)
+    w = quant(wf)
+    out = quant_matmul(x, w, bm=m, bn=N, bk=K, interpret=True,
+                       out_dtype=jnp.float32)
+    want = ref.quant_matmul_ref(x, w, out_dtype=jnp.float32)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+    exact = np.asarray(jnp.einsum("mk,kn->mn", x, wf))
+    scale = np.abs(exact).max() + 1e-6
+    np.testing.assert_allclose(np.asarray(out), exact,
+                               atol=fmt_tol * scale)
+
+
+@pytest.mark.parametrize("quant", [quantize_q8_0, quantize_q4_0])
+def test_quant_matmul_stacked_layer_slices(quant):
+    """Scan-over-layers serving path: a stacked (L, K, N) quantized
+    weight sliced per layer must matmul identically to quantizing each
+    layer independently (slicing only drops the leading dim — data,
+    scales and the derived logical shape all stay consistent)."""
+    L, M, K, N = 3, 2, 64, 48
+    k1, k2 = jax.random.split(jax.random.PRNGKey(11))
+    x = jax.random.normal(k1, (M, K), jnp.float32)
+    wf = jax.random.normal(k2, (L, K, N), jnp.float32)
+    stacked = quant(wf)
+    for i in range(L):
+        w_i = jax.tree_util.tree_map(lambda a: a[i], stacked)
+        assert w_i.logical_shape == (K, N)
+        out = quant_matmul(x, w_i, bm=M, bn=N, bk=K, interpret=True,
+                           out_dtype=jnp.float32)
+        want = quant_matmul(x, quant(wf[i]), bm=M, bn=N, bk=K,
+                            interpret=True, out_dtype=jnp.float32)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)
+
+
 def test_quant_matmul_grid_tiling_exact():
     """Tiling must not change results vs a single-tile call."""
     M, K, N = 256, 512, 256

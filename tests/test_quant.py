@@ -52,6 +52,22 @@ def test_scale_invariance(seed, fmt):
                                rtol=1e-5, atol=1e-5)
 
 
+def test_quantize_tree_idempotent():
+    """Re-running quantize_tree over an already-quantized tree is a
+    no-op. Regression: tree_map used to descend *into* QuantizedTensor
+    pytree nodes and quantize their int8 payloads (nested
+    QuantizedTensor → dequantize crashes at serving time)."""
+    from repro.quant.quantize import QuantizedTensor
+    params = {"w": jnp.ones((64, 32)), "norm": jnp.ones((32,))}
+    once = quantize_tree(params, "q8_0")
+    twice = quantize_tree(once, "q8_0")
+    assert isinstance(twice["w"], QuantizedTensor)
+    assert not isinstance(twice["w"].data, QuantizedTensor)
+    assert twice["w"] is once["w"]
+    np.testing.assert_array_equal(np.asarray(dequantize(twice["w"])),
+                                  np.asarray(dequantize(once["w"])))
+
+
 def test_quantize_tree_skips_norms_and_embeddings():
     params = {
         "embedding": jnp.ones((64, 32)),
@@ -70,3 +86,52 @@ def test_quantized_tensor_is_pytree():
     assert len(leaves) == 2
     out = jax.jit(lambda t: dequantize(t).sum())(qt)
     assert np.isfinite(float(out))
+
+
+@pytest.mark.parametrize("fmt", ["q8_0", "q4_0"])
+def test_shape_tracks_scan_over_layers_slicing(fmt):
+    """Regression: a stacked (L, K, N) QuantizedTensor sliced by
+    scan-over-layers must report the *sliced* logical shape. The old
+    statically-stored ``shape`` aux field survived the slice unchanged
+    (pytree children lose the leading dim; aux data doesn't), so
+    ``.shape`` lied inside every scan body — ``logical_shape`` is now
+    authoritative and ``shape`` aliases it."""
+    w = jax.random.normal(jax.random.PRNGKey(0), (3, 64, 16), jnp.float32)
+    qt = quantize(w, fmt)
+    assert qt.shape == (3, 64, 16)
+    assert qt.logical_shape == (3, 64, 16)
+    assert qt.ndim == 3 and qt.k_axis == 1
+
+    seen = []
+
+    def body(carry, q_l):
+        seen.append((q_l.shape, q_l.logical_shape, q_l.ndim, q_l.k_axis))
+        return carry + dequantize(q_l, jnp.float32).sum(), None
+
+    total, _ = jax.lax.scan(body, 0.0, qt)
+    assert seen == [((64, 16), (64, 16), 2, 0)]   # traced once, sliced
+    want = dequantize(qt, jnp.float32).sum()
+    np.testing.assert_allclose(float(total), float(want), rtol=1e-5)
+
+    # manual per-layer indexing (the unroll_scans path) agrees too
+    q0 = jax.tree_util.tree_map(lambda a: a[0], qt)
+    assert q0.shape == (64, 16)
+    np.testing.assert_allclose(np.asarray(dequantize(q0, jnp.float32)),
+                               np.asarray(dequantize(qt, jnp.float32))[0])
+
+
+def test_quantized_tensor_checkpoint_roundtrip(tmp_path):
+    """QuantizedTensor survives save/restore with the derived-shape
+    protocol (older checkpoints stored a redundant shape field)."""
+    from repro.training import checkpoint
+    qt = quantize(jax.random.normal(jax.random.PRNGKey(1), (2, 64, 16)),
+                  "q4_0")
+    path = str(tmp_path / "q.msgpack")
+    checkpoint.save(path, {"w": qt})
+    back = checkpoint.restore(path)["w"]
+    assert back.fmt == qt.fmt and back.group == qt.group
+    assert back.shape == qt.shape == (2, 64, 16)
+    np.testing.assert_array_equal(np.asarray(back.data),
+                                  np.asarray(qt.data))
+    np.testing.assert_array_equal(np.asarray(back.scales, np.float32),
+                                  np.asarray(qt.scales, np.float32))

@@ -4,7 +4,14 @@
 the engine serves — full attention (deepseek), long-context dense
 (mistral-nemo), SSM (mamba2) and RG-LRU hybrid with sliding-window
 local attention (recurrentgemma) — so every engine test exercises
-every cache layout, not just the default arch.
+every cache layout, not just the default arch. It is additionally
+parametrized over the quant policy (paper §5.3): every family also
+runs with q4_0 weights, plus one q8_0 combination, so scan-over-layers
+slicing of QuantizedTensor leaves, prefill cache splicing and the
+frozen-write retirement mask are all exercised quantized. Each test's
+oracle (``reference_decode`` / manual loops) uses the *same* quantized
+params — engine-vs-reference equivalence is exact even though the
+quantized token streams differ from bf16's.
 """
 import jax
 import jax.numpy as jnp
@@ -13,17 +20,24 @@ import pytest
 
 from repro.configs import get_config, reduced
 from repro.models import Model
+from repro.quant import quantize_tree
 from repro.serving import Request, SamplingConfig, ServingEngine, sample
 
 ARCHS = ("deepseek-7b", "mistral-nemo-12b", "mamba2-2.7b",
          "recurrentgemma-2b")
+SETUPS = ([(a, "bf16") for a in ARCHS] + [(a, "q4_0") for a in ARCHS]
+          + [("deepseek-7b", "q8_0")])
 
 
-@pytest.fixture(scope="module", params=ARCHS)
+@pytest.fixture(scope="module", params=SETUPS,
+                ids=[f"{a}-{q}" for a, q in SETUPS])
 def engine_setup(request):
-    cfg = reduced(get_config(request.param))
+    arch, quant = request.param
+    cfg = reduced(get_config(arch))
     m = Model(cfg)
     params = m.init(jax.random.PRNGKey(0))
+    if quant != "bf16":
+        params = quantize_tree(params, quant, cfg.quant_group)
     return cfg, m, params
 
 
@@ -228,6 +242,31 @@ def test_chunked_admission_zero_extra_dispatches(engine_setup):
     assert eng.stats.chunk_refills >= 1            # 40 > prefill_chunk=8
 
 
+def test_engine_rejects_mismatched_prequantized_params():
+    """quant_policy must describe what is actually served: handing the
+    engine a tree already quantized in a different format raises
+    instead of silently mislabeling (re-quantizing int weights would
+    compound error)."""
+    cfg = reduced(get_config("deepseek-7b"), d_model=64, d_ff=128,
+                  vocab_size=256, num_heads=2, num_kv_heads=1)
+    m = Model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    q8 = quantize_tree(params, "q8_0", cfg.quant_group)
+    with pytest.raises(ValueError, match="already quantized"):
+        ServingEngine(m, q8, slots=1, max_len=64, quant_policy="q4_0")
+    # matching policy is the documented no-op path — and it must
+    # actually serve (catches quantize_tree descending into
+    # QuantizedTensor nodes and nesting them)
+    eng = ServingEngine(m, q8, slots=1, max_len=64, quant_policy="q8_0")
+    assert eng.quant_policy == "q8_0"
+    req = Request(uid=0, prompt=np.asarray([3, 1, 4], np.int32),
+                  max_new_tokens=3)
+    eng.submit(req)
+    eng.run()
+    assert req.done
+    assert req.output == m.reference_decode(q8, req.prompt, 3)
+
+
 def test_planner_picks_megastep_k():
     """Dispatch-overhead napkin math: K grows as the device step
     shrinks relative to the launch cost, the analytic serving model
@@ -287,3 +326,14 @@ def test_plan_decode_sets_admission_and_donation():
     assert p.admission in ("chunked", "stall")
     assert p.donate_carries
     assert "admission=" in p.summary()
+    # precision is a first-class plan output: memory-bound decode on
+    # TPU wants the 4.5-bit stream; the quality floor can veto it
+    assert p.quant_policy == "q4_0"
+    assert "quant=" in p.summary()
+    assert p.config_overrides()["quant_policy"] == "q4_0"
+    p_q8 = plan(cfg, INPUT_SHAPES["decode_32k"], TPU_V5E,
+                avg_prompt_len=32, quality_floor_bits=8.0)
+    assert p_q8.quant_policy == "q8_0"
+    p_bf = plan(cfg, INPUT_SHAPES["decode_32k"], TPU_V5E,
+                avg_prompt_len=32, allow_quant=False)
+    assert p_bf.quant_policy == "bf16"
