@@ -24,6 +24,12 @@ def main() -> None:
                     default="q8_0", choices=["bf16", "q8_0", "q4_0"],
                     help="serving weight precision (paper §5.3; "
                          "--precision kept as a back-compat alias)")
+    ap.add_argument("--kv-quant", dest="kv_quant", default="bf16",
+                    choices=["bf16", "q8_0", "q4_0"],
+                    help="KV-cache precision: groupwise int8 payload + "
+                         "scales per ring-buffer position (the decode "
+                         "stream that grows with context; no-op for "
+                         "recurrent families)")
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--requests", type=int, default=12)
     ap.add_argument("--max-new", type=int, default=24)
@@ -31,18 +37,24 @@ def main() -> None:
 
     cfg = reduced(get_config("mistral-nemo-12b"), num_layers=4,
                   d_model=256, d_ff=512)
-    model_cfg = dataclasses.replace(cfg, quant_policy=args.quant)
+    model_cfg = dataclasses.replace(cfg, quant_policy=args.quant,
+                                    kv_quant=args.kv_quant)
     model = Model(model_cfg)
     params = model.init(jax.random.PRNGKey(0), quantize=False)
     if args.quant != "bf16":
         print(f"serving with {args.quant} weights "
               f"(paper: Q4 = 4.5 bits/weight)")
+    if args.kv_quant != "bf16":
+        print(f"serving with a {args.kv_quant} KV cache "
+              f"(cache bytes x {8.5 / 16 if args.kv_quant == 'q8_0' else 4.5 / 16:.3f})")
 
-    # the engine quantizes the weight pytree on entry per quant_policy
+    # the engine quantizes the weight pytree on entry per quant_policy;
+    # kv_quant stores cache leaves as int8 payload + groupwise scales
     engine = ServingEngine(model, params, slots=args.slots, max_len=256,
                            sampling=SamplingConfig(temperature=0.7,
                                                    top_k=40),
-                           quant_policy=args.quant)
+                           quant_policy=args.quant,
+                           kv_quant=args.kv_quant)
     rng = np.random.default_rng(0)
     reqs = [Request(uid=i,
                     prompt=rng.integers(1, cfg.vocab_size,

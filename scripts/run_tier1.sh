@@ -2,9 +2,11 @@
 # Tier-1 verification wrapper: the full pytest suite (including the
 # serving property suite, tests/test_serving_properties.py) with a
 # pinned hypothesis seed/profile so runs are deterministic in CI —
-# followed by a seeded q4_0 quantized-serving smoke and a schema check
-# of the committed BENCH_serving.json (the precision section must be
-# present: benchmarks/serving_bench.py --sweep precision writes it).
+# followed by seeded q4_0 weight-quant and q8_0 kv-cache serving
+# smokes and a schema check of the committed BENCH_serving.json (the
+# precision and kv_precision sections must be present:
+# benchmarks/serving_bench.py --sweep precision / --sweep kv write
+# them).
 #
 # With hypothesis installed, tests/_hypothesis_compat.py loads a
 # derandomized profile; without it (this container), the compat shim's
@@ -50,11 +52,47 @@ print(f"[tier1] q4_0 smoke OK: {len(reqs)} requests token-identical "
       f"to the quantized reference")
 EOF
 
+echo "[tier1] q8_0 kv-cache serving smoke (seeded)"
+python - <<'EOF'
+import jax, numpy as np
+from repro.configs import get_config, reduced
+from repro.models import Model
+from repro.serving import Request, ServingEngine
+
+cfg = reduced(get_config("deepseek-7b"), d_model=64, d_ff=128,
+              vocab_size=256, num_heads=2, num_kv_heads=1)
+m = Model(cfg)
+params = m.init(jax.random.PRNGKey(0))
+eng = ServingEngine(m, params, slots=2, max_len=64, megastep_k=4,
+                    kv_quant="q8_0")
+assert eng.kv_quant == "q8_0"
+import jax.numpy as jnp
+assert any(l.dtype == jnp.int8
+           for l in jax.tree_util.tree_leaves(eng.cache)), \
+    "kv_quant engine must hold an int8 cache"
+rng = np.random.default_rng(1)
+reqs = [Request(uid=i,
+                prompt=rng.integers(1, cfg.vocab_size, size=6).astype(np.int32),
+                max_new_tokens=6) for i in range(3)]
+for r in reqs:
+    eng.submit(r)
+eng.run()
+for r in reqs:
+    assert r.done, r.uid
+    # same quantized-cache path: the rebound model's reference loop
+    ref = eng.model.reference_decode(eng.params, r.prompt,
+                                     r.max_new_tokens)
+    assert r.output == ref, (r.uid, r.output, ref)
+print(f"[tier1] kv-quant smoke OK: {len(reqs)} requests token-identical "
+      f"to the quantized-cache reference")
+EOF
+
 echo "[tier1] BENCH_serving.json schema check"
 python - <<'EOF'
 import json, pathlib
 bench = json.loads(pathlib.Path("BENCH_serving.json").read_text())
-for key in ("per_k", "k8_over_k1_decode", "mixed_workload", "precision"):
+for key in ("per_k", "k8_over_k1_decode", "mixed_workload", "precision",
+            "kv_precision"):
     assert key in bench, f"BENCH_serving.json missing section: {key}"
 prec = bench["precision"]
 for key in ("formats", "q4_over_bf16_k8_decode", "analytic_a17_2t"):
@@ -66,6 +104,23 @@ for fmt in ("bf16", "q8_0", "q4_0"):
         assert "decode_tok_s" in row and row["decode_tok_s"] > 0, (fmt, k)
     assert prec["formats"][fmt]["greedy_equiv_k8_k1"] is True, \
         f"{fmt}: greedy K-invariance broken"
+kv = bench["kv_precision"]
+for key in ("formats", "q8_over_bf16_k8_decode", "q4_over_bf16_k8_decode",
+            "analytic_a17_2t"):
+    assert key in kv, f"kv_precision section missing key: {key}"
+expected_ratio = {"bf16": 1.0, "q8_0": 8.5 / 16, "q4_0": 4.5 / 16}
+for fmt in ("bf16", "q8_0", "q4_0"):
+    assert fmt in kv["formats"], f"kv_precision.formats missing {fmt}"
+    row = kv["formats"][fmt]
+    for k in ("k1", "k8"):
+        assert row[k]["decode_tok_s"] > 0, (fmt, k)
+    # int8 payload + groupwise scales must land at ~bits/16 of bf16
+    # (small slack: the int32 lens leaf doesn't shrink)
+    assert abs(row["cache_bytes_ratio"] - expected_ratio[fmt]) < 0.02, \
+        (fmt, row["cache_bytes_ratio"])
+    assert row["greedy_equiv_k8_k1"] is True, \
+        f"kv {fmt}: greedy K-invariance broken"
 print("[tier1] BENCH_serving.json schema OK "
-      f"(q4/bf16 @K8 decode = {prec['q4_over_bf16_k8_decode']})")
+      f"(q4/bf16 @K8 decode = {prec['q4_over_bf16_k8_decode']}; "
+      f"kv q8/bf16 @K8 = {kv['q8_over_bf16_k8_decode']})")
 EOF

@@ -96,6 +96,13 @@ class ModelConfig:
     fuse_gate_up: bool = True
     quant_policy: str = "bf16"     # weights precision: bf16|q8_0|q4_0
     quant_group: int = 32          # k-quant group size along reduction dim
+    # KV-cache precision (the other half of the decode bandwidth story:
+    # the cache stream grows with context/batch while weights don't).
+    # Groupwise-quantized int8 payload + per-(position, head, group)
+    # scales stored as sibling cache leaves. No-op for recurrent
+    # families (ssm/hybrid): their state is small and
+    # precision-sensitive, see Model.kv_quant_effective().
+    kv_quant: str = "bf16"         # cache precision: bf16|q8_0|q4_0
     use_pallas: bool = False       # use Pallas kernels (interpret on CPU)
     remat: bool = True             # activation checkpointing per layer
     # Cost-calibration mode (launch/dryrun.py): python-loop the layer

@@ -234,29 +234,38 @@ def decode_carry_bytes(cfg, batch: int, kv_len: int,
 
 def quantized_per_token_s(per_token_s: float, hw: HardwareSpec,
                           weight_bytes: float = 0.0,
-                          weight_format: str = "bf16") -> float:
-    """Adjust a bf16-calibrated per-token decode time for a weight
-    precision (paper §5.3: quantization is the single largest lever
-    because decode GEMVs are weight-stream-bound).
+                          weight_format: str = "bf16",
+                          cache_bytes: float = 0.0,
+                          kv_format: str = "bf16") -> float:
+    """Adjust a bf16-calibrated per-token decode time for weight and/or
+    KV-cache precision (paper §5.3: quantization is the single largest
+    lever because decode GEMVs are weight-stream-bound; the cache is
+    the second stream, and the one that grows with context and batch).
 
-    ``weight_bytes`` is the bf16 footprint of the weights streamed per
-    token. Two precision terms move: the stream shrinks by
-    ``bits_per_weight / 16`` (the memory-roofline win) and the
-    in-kernel dequant adds ``dequant_flops_per_weight`` per weight (the
-    NEON/VREG widen+scale cost — what erodes the Q4 win as models grow,
-    Fig 4e). The subtraction is clamped at zero: this helper cannot see
-    the compute/memory split inside ``per_token_s``, so a caller whose
-    step is not weight-stream-dominated should pass only the weight
-    share of the stream as ``weight_bytes`` (or use the graph-level
-    ``scheduler.simulate_precision``, which models the split).
+    ``weight_bytes`` / ``cache_bytes`` are the bf16 footprints of the
+    two streams read per token. Two precision terms move per stream:
+    it shrinks by ``bits_per_weight / 16`` (the memory-roofline win)
+    and the in-kernel dequant adds ``dequant_flops_per_weight`` per
+    element (the NEON/VREG widen+scale cost — what erodes the Q4 win
+    as models grow, Fig 4e; for the cache the same tax applies per K/V
+    element read). The subtraction is clamped at zero: this helper
+    cannot see the compute/memory split inside ``per_token_s``, so a
+    caller whose step is not stream-dominated should pass only the
+    stream's share of the bytes (or use the graph-level
+    ``scheduler.simulate_precision`` / ``simulate_kv_precision``,
+    which model the split).
     """
-    if not weight_bytes or weight_format in ("bf16", "f16", "f32"):
-        return per_token_s
-    fmt = get_format(weight_format)
-    saved = weight_bytes * (1.0 - fmt.stream_ratio) \
-        / (hw.mem_bw * hw.mem_efficiency)
-    dequant = fmt.dequant_flops_per_weight * (weight_bytes / 2.0) \
-        / (hw.peak_flops * hw.flop_efficiency)
+    saved = 0.0
+    dequant = 0.0
+    for nbytes, fname in ((weight_bytes, weight_format),
+                          (cache_bytes, kv_format)):
+        if not nbytes or fname in ("bf16", "f16", "f32"):
+            continue
+        fmt = get_format(fname)
+        saved += nbytes * (1.0 - fmt.stream_ratio) \
+            / (hw.mem_bw * hw.mem_efficiency)
+        dequant += fmt.dequant_flops_per_weight * (nbytes / 2.0) \
+            / (hw.peak_flops * hw.flop_efficiency)
     return max(per_token_s - saved, 0.0) + dequant
 
 
@@ -264,7 +273,9 @@ def megastep_time(per_token_s: float, hw: HardwareSpec, k: int = 1, *,
                   carry_bytes: float = 0.0,
                   donate_carries: bool = True,
                   weight_bytes: float = 0.0,
-                  weight_format: str = "bf16") -> float:
+                  weight_format: str = "bf16",
+                  cache_bytes: float = 0.0,
+                  kv_format: str = "bf16") -> float:
     """Wall time of one K-token serving megastep: one host dispatch +
     K device-resident decode iterations. The per-token dispatch share
     ``dispatch_overhead_s / k`` is the lever the paper's §5 CPU-vs-GPU
@@ -280,9 +291,14 @@ def megastep_time(per_token_s: float, hw: HardwareSpec, k: int = 1, *,
     ``weight_bytes`` / ``weight_format`` fold the precision dimension
     into the same napkin math (see :func:`quantized_per_token_s`):
     a Q4 megastep streams 4.5/16 of the bf16 weight bytes per token.
+    ``cache_bytes`` / ``kv_format`` do the same for the KV-cache
+    stream — a quantized cache also shrinks the *carry* crossing the
+    dispatch boundary, so pass a pre-scaled ``carry_bytes`` when the
+    carry is the cache (``decode_carry_bytes(...) * stream_ratio``).
     """
     per_token_s = quantized_per_token_s(per_token_s, hw, weight_bytes,
-                                        weight_format)
+                                        weight_format, cache_bytes,
+                                        kv_format)
     boundary = 0.0 if donate_carries else \
         carry_bytes / (hw.mem_bw * hw.mem_efficiency)
     return hw.dispatch_overhead_s + boundary + k * per_token_s
@@ -292,12 +308,16 @@ def megastep_tokens_per_s(per_token_s: float, hw: HardwareSpec,
                           k: int = 1, *, carry_bytes: float = 0.0,
                           donate_carries: bool = True,
                           weight_bytes: float = 0.0,
-                          weight_format: str = "bf16") -> float:
+                          weight_format: str = "bf16",
+                          cache_bytes: float = 0.0,
+                          kv_format: str = "bf16") -> float:
     return tokens_per_second(
         megastep_time(per_token_s, hw, k, carry_bytes=carry_bytes,
                       donate_carries=donate_carries,
                       weight_bytes=weight_bytes,
-                      weight_format=weight_format), k)
+                      weight_format=weight_format,
+                      cache_bytes=cache_bytes,
+                      kv_format=kv_format), k)
 
 
 # ---------------------------------------------------------------------------
@@ -349,7 +369,9 @@ def roofline(hlo_flops: float, hlo_bytes: float, collective_bytes: float,
              links_per_chip: int = 1,
              steps_per_dispatch: int = 0,
              weight_hlo_bytes: float = 0.0,
-             weight_format: str = "bf16") -> RooflineTerms:
+             weight_format: str = "bf16",
+             kv_cache_bytes: float = 0.0,
+             kv_format: str = "bf16") -> RooflineTerms:
     """The brief's three terms, plus an optional dispatch term.
 
     FLOPs/bytes from ``compiled.cost_analysis()`` are *per device* under
@@ -363,13 +385,19 @@ def roofline(hlo_flops: float, hlo_bytes: float, collective_bytes: float,
     ``bits_per_weight / 16`` and add the in-kernel dequant FLOPs —
     the paper's §5.3 quantization lever as a roofline term, so an
     analysis of a bf16-compiled HLO can predict its Q8/Q4 serving
-    variant without recompiling.
+    variant without recompiling. ``kv_cache_bytes`` / ``kv_format``
+    apply the identical rescale to the KV-cache share of ``hlo_bytes``
+    — the second memory stream, dominant at long context where the
+    paper's CPU-vs-GPU crossover lives.
     """
     mem_bytes, flops = hlo_bytes, hlo_flops
-    if weight_hlo_bytes and weight_format not in ("bf16", "f16", "f32"):
-        fmt = get_format(weight_format)
-        mem_bytes -= weight_hlo_bytes * (1.0 - fmt.stream_ratio)
-        flops += fmt.dequant_flops_per_weight * (weight_hlo_bytes / 2.0)
+    for nbytes, fname in ((weight_hlo_bytes, weight_format),
+                          (kv_cache_bytes, kv_format)):
+        if not nbytes or fname in ("bf16", "f16", "f32"):
+            continue
+        fmt = get_format(fname)
+        mem_bytes -= nbytes * (1.0 - fmt.stream_ratio)
+        flops += fmt.dequant_flops_per_weight * (nbytes / 2.0)
     return RooflineTerms(
         compute_s=flops / hw.peak_flops,
         memory_s=mem_bytes / hw.mem_bw,

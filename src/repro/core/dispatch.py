@@ -65,6 +65,14 @@ class ExecutionPlan:
     # decision, emitted as a first-class plan field the engine consumes
     # (ServingEngine(quant_policy=...))
     quant_policy: str = "bf16"
+    # serving KV-cache precision (the second memory stream — grows with
+    # context/batch where weights don't): groupwise-quantized cache
+    # leaves, emitted for decode shapes when quality allows
+    # (quality_floor_bits veto applies, same as quant_policy) and
+    # cross-checked against scheduler.simulate_kv_precision at the
+    # plan's context length. Always bf16 for recurrent families
+    # (ssm/hybrid) — the engine treats kv_quant as a no-op there.
+    kv_quant: str = "bf16"
 
     def config_overrides(self) -> Dict:
         """Overrides to apply to the ModelConfig for this plan."""
@@ -73,6 +81,7 @@ class ExecutionPlan:
             fuse_qkv=self.fuse_qkv,
             fuse_gate_up=self.fuse_gate_up,
             quant_policy=self.quant_policy,
+            kv_quant=self.kv_quant,
             use_pallas=any(d.use_pallas for d in self.decisions),
         )
 
@@ -83,7 +92,8 @@ class ExecutionPlan:
                  f"megastep_k={self.megastep_k} "
                  f"admission={self.admission} "
                  f"donate={self.donate_carries} "
-                 f"quant={self.quant_policy}"]
+                 f"quant={self.quant_policy} "
+                 f"kv_quant={self.kv_quant}"]
         for d in self.decisions:
             lines.append(
                 f"  {d.tag:<10} AI={d.arithmetic_intensity:9.1f} "
@@ -150,6 +160,7 @@ def plan(cfg: ModelConfig, shape: InputShape,
     # to the time axis (launch cost vs per-token device time).
     megastep_k = 1
     admission = "chunked"
+    kv_quant = "bf16"
     if shape.kind == "decode":
         step_s = cm.graph_time_wave(g, hw)
         megastep_k = choose_megastep_k(hw, step_s,
@@ -159,6 +170,7 @@ def plan(cfg: ModelConfig, shape: InputShape,
         # the dispatch+stall cost of a dedicated prefill (long prompts
         # on compute-rich hardware).
         from repro.core.scheduler import (simulate_admission,
+                                          simulate_kv_precision,
                                           simulate_precision)
         adm = simulate_admission(
             cfg, hw, k=megastep_k, batch=max(shape.global_batch, 1),
@@ -181,12 +193,31 @@ def plan(cfg: ModelConfig, shape: InputShape,
             best = max(allowed,
                        key=lambda f: sweep[f][megastep_k].tokens_per_s)
             quant_policy = "bf16" if best == "f16" else best
+        if allow_quant and cfg.arch_type not in ("ssm", "hybrid"):
+            # Cache precision: same quality-floor veto as weights, then
+            # pick the fastest allowed format at this plan's context
+            # length and K — the cache stream only matters once kv_len
+            # makes it non-negligible, which the simulator models.
+            allowed_kv = ["bf16"] + [f for f in ("q8_0", "q4_0")
+                                     if get_format(f).bits_per_weight
+                                     >= quality_floor_bits]
+            if len(allowed_kv) > 1:
+                kvl = max(shape.seq_len, 1)
+                kv_sweep = simulate_kv_precision(
+                    cfg, hw, batch=max(shape.global_batch, 1),
+                    formats=allowed_kv, ks=(megastep_k,),
+                    kv_lens=(kvl,))
+                kv_quant = max(
+                    allowed_kv,
+                    key=lambda f:
+                        kv_sweep[f][kvl][megastep_k].tokens_per_s)
     return ExecutionPlan(
         arch=cfg.name, shape=shape.name, hardware=hw.name,
         scheduler_version=version, fuse_qkv=True,
         fuse_gate_up=cfg.glu, decisions=decisions,
         megastep_k=megastep_k, admission=admission,
-        donate_carries=True, quant_policy=quant_policy)
+        donate_carries=True, quant_policy=quant_policy,
+        kv_quant=kv_quant)
 
 
 def choose_megastep_k(hw: cm.HardwareSpec, step_s: float, *,

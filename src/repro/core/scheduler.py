@@ -215,6 +215,76 @@ def simulate_precision(cfg: ModelConfig,
         donate_carries=donate_carries) for fmt in formats}
 
 
+def simulate_kv_precision(cfg: ModelConfig,
+                          hw: Optional[cm.HardwareSpec] = None, *,
+                          threads: int = 4, batch: int = 1,
+                          formats: Sequence[str] = ("bf16", "q8_0",
+                                                    "q4_0"),
+                          ks: Sequence[int] = (1, 8),
+                          kv_lens: Sequence[int] = (64, 1024, 8192),
+                          weight_format: str = "f16",
+                          donate_carries: bool = True,
+                          ) -> Dict[str, Dict[int, Dict[int,
+                                                        VersionResult]]]:
+    """Serving throughput across KV-cache precisions × megastep K ×
+    context length — the analytic twin of
+    ``benchmarks/serving_bench.py --sweep kv``.
+
+    The cache stream is the one that *grows* with context and batch
+    (weights don't), so unlike the weight sweep the win here is a
+    function of ``kv_len``: at short context the cache bytes are
+    negligible next to the weight stream + dispatch floor, at long
+    context they dominate and both quantized formats must beat bf16.
+    Whether q4_0 or q8_0 leads is the per-element dequant-tax call
+    (Fig 4e erosion): on the compute-poor A17 the q4 unpack cost hands
+    the win to q8_0 — the same inversion PR 3 measured for weights on
+    XLA-CPU — while compute-rich TPUs keep q4_0 ahead. Quantizing the
+    cache also
+    shrinks the megastep *carry*, so the un-donated boundary term
+    scales by the same ``stream_ratio``. Recurrent families
+    (ssm/hybrid) serve bf16 state regardless — ``kv_quant`` is a
+    contract no-op there, and this simulator reflects that by not
+    rescaling their cache stream.
+
+    Returns ``{fmt: {kv_len: {k: VersionResult}}}``.
+    """
+    from repro.core.precision import get_format
+    hw = hw or cm.a17_cpu(threads)
+    noop = cfg.arch_type in ("ssm", "hybrid")
+    # the bf16-calibrated step depends only on kv_len, not the format
+    per_ctx = {}
+    for kvl in kv_lens:
+        g = build_decoder_graph(cfg, seq=1, kv_len=kvl, batch=batch,
+                                weight_format=weight_format, fused=True)
+        per_ctx[kvl] = (cm.graph_time_wave(g, hw,
+                                           overlap_efficiency=0.92),
+                        cm.decode_carry_bytes(cfg, batch, kvl),
+                        len(g.nodes))
+    out: Dict[str, Dict[int, Dict[int, VersionResult]]] = {}
+    for fmt in formats:
+        eff = "bf16" if noop else fmt
+        ratio = (1.0 if eff in ("bf16", "f16", "f32")
+                 else get_format(eff).stream_ratio)
+        per_len: Dict[int, Dict[int, VersionResult]] = {}
+        for kvl in kv_lens:
+            per_tok, cache, n_nodes = per_ctx[kvl]
+            per_k: Dict[int, VersionResult] = {}
+            for k in ks:
+                t = cm.megastep_time(
+                    per_tok, hw, k, carry_bytes=cache * ratio,
+                    donate_carries=donate_carries,
+                    cache_bytes=cache, kv_format=eff)
+                per_k[k] = VersionResult(
+                    f"kv_{fmt}_ctx{kvl}_k{k}", t / k,
+                    cm.tokens_per_second(t, 1) * k * batch,
+                    n_nodes,
+                    f"cache {cache * ratio / 1e3:.1f}kB/token "
+                    f"({eff}), 1 dispatch / {k} tok")
+            per_len[kvl] = per_k
+        out[fmt] = per_len
+    return out
+
+
 def simulate_admission(cfg: ModelConfig,
                        hw: Optional[cm.HardwareSpec] = None, *,
                        threads: int = 4, k: int = 8, batch: int = 4,

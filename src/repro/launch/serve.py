@@ -26,6 +26,11 @@ def main() -> None:
     ap.add_argument("--reduced", action="store_true", default=True)
     ap.add_argument("--precision", default="bf16",
                     choices=["bf16", "q8_0", "q4_0"])
+    ap.add_argument("--kv-quant", dest="kv_quant", default="bf16",
+                    choices=["bf16", "q8_0", "q4_0"],
+                    help="KV-cache precision: groupwise int8 payload + "
+                         "scale leaves per cached position (no-op for "
+                         "ssm/hybrid state)")
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=16)
@@ -49,7 +54,8 @@ def main() -> None:
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = reduced(cfg)
-    cfg = dataclasses.replace(cfg, quant_policy=args.precision)
+    cfg = dataclasses.replace(cfg, quant_policy=args.precision,
+                              kv_quant=args.kv_quant)
     model = Model(cfg)
     params = model.init(jax.random.PRNGKey(0), quantize=False)
     if args.precision != "bf16":
@@ -79,6 +85,7 @@ def main() -> None:
              if engine.admission == "chunked" else
              f"{engine.stats.prefill_batches} prefill batches")
     print(f"arch={cfg.name} precision={args.precision} "
+          f"kv_quant={engine.kv_quant} "
           f"admission={engine.admission}: "
           f"{engine.stats.tokens_generated} tokens / {dt:.1f}s = "
           f"{engine.stats.tokens_generated / dt:.1f} tok/s "

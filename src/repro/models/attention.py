@@ -29,6 +29,8 @@ from repro.distributed.sharding import constrain
 from repro.kernels import ops
 from repro.models import layers
 from repro.models.params import ParamSpec
+from repro.quant.quantize import (dequantize_rows, kv_group_size,
+                                  quantize_rows)
 
 
 # ---------------------------------------------------------------------------
@@ -229,6 +231,7 @@ def attention_decode(p, cfg: ModelConfig, x: jax.Array, cache: Dict, *,
 
     lens = cache["lens"]                          # (B,) int32
     S_cache = cache["k"].shape[2]
+    kv_quant = cfg.kv_quant if "k_scale" in cache else "bf16"
     pos = lens                                    # new token's position
     if use_rope:
         # pin the rope operands before the cos/sin broadcast-mul: on big
@@ -246,31 +249,100 @@ def attention_decode(p, cfg: ModelConfig, x: jax.Array, cache: Dict, *,
         k = k.reshape(B, Hkv, hd)
     v = v.reshape(B, Hkv, hd)
     slot = lens % S_cache
-    bidx = jnp.arange(B)
-    new_k = cache["k"].at[bidx, :, slot].set(k.astype(cache["k"].dtype))
-    new_v = cache["v"].at[bidx, :, slot].set(v.astype(cache["v"].dtype))
+    new_cache = dict(cache, lens=lens + 1)
+    new_cache.update(kv_cache_write(cache, k, v, slot,
+                                    kv_quant=kv_quant,
+                                    group=cfg.quant_group))
+    k_read, v_read = kv_cache_read(new_cache, kv_quant=kv_quant)
     kv_len = jnp.minimum(lens + 1, S_cache)
     q = constrain(q, ("batch", "heads", None))
-    out = ops.decode_attention(q, new_k, new_v, kv_len=kv_len,
+    out = ops.decode_attention(q, k_read, v_read, kv_len=kv_len,
                                use_pallas=cfg.use_pallas)
     out = out.reshape(B, 1, H * hd)
     out = layers.linear(p["wo"], out, use_pallas=cfg.use_pallas)
-    new_cache = dict(cache, k=new_k, v=new_v, lens=lens + 1)
     return out, new_cache
 
 
-def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int,
-                  window: int = 0, dtype=jnp.bfloat16) -> Dict:
-    """Cache shapes; ``window`` > 0 caps the cache (ring buffer)."""
-    S = min(max_len, window) if window else max_len
+def kv_cache_write(cache: Dict, k: jax.Array, v: jax.Array,
+                   slot: jax.Array, *, kv_quant: str = "bf16",
+                   group: int = 32) -> Dict:
+    """Write one (B, Hkv, hd) K/V row at per-row ring ``slot`` (B,).
+
+    Quantized caches (``kv_quant`` q8_0/q4_0) quantize the row at the
+    write point — int8 payload into ``k``/``v``, per-(head, group)
+    scales into the sibling ``k_scale``/``v_scale`` leaves — so the
+    cache stream shrinks to bits/16 of its bf16 footprint. Returns the
+    updated leaves only (caller merges + advances ``lens``)."""
+    B = k.shape[0]
+    bidx = jnp.arange(B)
+    if kv_quant in ("bf16", "f16", "f32"):
+        return {
+            "k": cache["k"].at[bidx, :, slot].set(
+                k.astype(cache["k"].dtype)),
+            "v": cache["v"].at[bidx, :, slot].set(
+                v.astype(cache["v"].dtype)),
+        }
+    kq, ks = quantize_rows(k, kv_quant, group)
+    vq, vs = quantize_rows(v, kv_quant, group)
     return {
-        "k": jnp.zeros((batch, cfg.num_kv_heads, S, cfg.head_dim), dtype),
-        "v": jnp.zeros((batch, cfg.num_kv_heads, S, cfg.head_dim), dtype),
+        "k": cache["k"].at[bidx, :, slot].set(kq),
+        "v": cache["v"].at[bidx, :, slot].set(vq),
+        "k_scale": cache["k_scale"].at[bidx, :, slot].set(
+            ks.astype(cache["k_scale"].dtype)),
+        "v_scale": cache["v_scale"].at[bidx, :, slot].set(
+            vs.astype(cache["v_scale"].dtype)),
+    }
+
+
+def kv_cache_read(cache: Dict, *, kv_quant: str = "bf16",
+                  dtype=jnp.bfloat16) -> Tuple[jax.Array, jax.Array]:
+    """The attention-visible (B, Hkv, S, hd) K/V view of a cache.
+
+    bf16 caches return their leaves as-is; quantized caches dequantize
+    payload × scales at the read point. Like the XLA weight-dequant
+    path, this materializes a bf16 view per step — the bytes win is in
+    storage and the carry crossing the dispatch boundary; in-VMEM
+    dequant is the Pallas follow-up."""
+    if kv_quant in ("bf16", "f16", "f32"):
+        return cache["k"], cache["v"]
+    return (dequantize_rows(cache["k"], cache["k_scale"], kv_quant, dtype),
+            dequantize_rows(cache["v"], cache["v_scale"], kv_quant, dtype))
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int,
+                  window: int = 0, dtype=jnp.bfloat16,
+                  kv_quant: str = "bf16") -> Dict:
+    """Cache shapes; ``window`` > 0 caps the cache (ring buffer).
+
+    ``kv_quant`` q8_0/q4_0 stores K/V as int8 payload (q4_0
+    nibble-packed along head_dim) plus groupwise ``k_scale``/``v_scale``
+    leaves — every leaf still carries batch on axis 0 and the ring
+    position on axis 2, so the frozen-write mask, megastep donation and
+    prefill splicing treat them like any other cache leaf."""
+    S = min(max_len, window) if window else max_len
+    Hkv, hd = cfg.num_kv_heads, cfg.head_dim
+    if kv_quant in ("bf16", "f16", "f32"):
+        return {
+            "k": jnp.zeros((batch, Hkv, S, hd), dtype),
+            "v": jnp.zeros((batch, Hkv, S, hd), dtype),
+            "lens": jnp.zeros((batch,), jnp.int32),
+        }
+    g = kv_group_size(hd, cfg.quant_group, kv_quant)
+    pd = hd // 2 if kv_quant == "q4_0" else hd
+    return {
+        "k": jnp.zeros((batch, Hkv, S, pd), jnp.int8),
+        "v": jnp.zeros((batch, Hkv, S, pd), jnp.int8),
+        "k_scale": jnp.zeros((batch, Hkv, S, hd // g), dtype),
+        "v_scale": jnp.zeros((batch, Hkv, S, hd // g), dtype),
         "lens": jnp.zeros((batch,), jnp.int32),
     }
 
 
-def kv_cache_axes() -> Dict:
-    return {"k": ("batch", None, "kv_seq", None),
+def kv_cache_axes(kv_quant: str = "bf16") -> Dict:
+    axes = {"k": ("batch", None, "kv_seq", None),
             "v": ("batch", None, "kv_seq", None),
             "lens": ("batch",)}
+    if kv_quant not in ("bf16", "f16", "f32"):
+        axes["k_scale"] = ("batch", None, "kv_seq", None)
+        axes["v_scale"] = ("batch", None, "kv_seq", None)
+    return axes

@@ -302,9 +302,22 @@ class Model:
     # Serving: prefill + decode
     # =========================================================================
 
-    def init_cache(self, batch: int, max_len: int, dtype=jnp.bfloat16):
+    def kv_quant_effective(self, kv_quant: Optional[str] = None) -> str:
+        """Cache precision actually served. Recurrent families (SSM /
+        RG-LRU hybrid) keep bf16 state regardless of ``cfg.kv_quant``:
+        their per-layer state is small (no growth with context) and the
+        sequential scan compounds rounding — ``kv_quant`` is a
+        contract no-op there, verified by test."""
+        kvq = self.cfg.kv_quant if kv_quant is None else kv_quant
+        if self.cfg.arch_type in ("ssm", "hybrid"):
+            return "bf16"
+        return kvq
+
+    def init_cache(self, batch: int, max_len: int, dtype=jnp.bfloat16,
+                   kv_quant: Optional[str] = None):
         cfg = self.cfg
         window = self.window_for(max_len)
+        kvq = self.kv_quant_effective(kv_quant)
         if cfg.arch_type == "ssm":
             one = lambda: ssm_mod.init_ssm_cache(cfg, batch, dtype)
             cache = {"layers": _stack_pytrees(
@@ -320,7 +333,7 @@ class Model:
             cache = {"layers": per_layer}
         else:
             one = lambda: attn.init_kv_cache(cfg, batch, max_len, window,
-                                             dtype)
+                                             dtype, kv_quant=kvq)
             cache = {"layers": _stack_pytrees(
                 [one() for _ in range(cfg.num_layers)])}
             if cfg.arch_type == "audio":
@@ -333,8 +346,9 @@ class Model:
                 cache["cross_lens"] = jnp.zeros((batch,), jnp.int32)
         return cache
 
-    def cache_axes(self):
+    def cache_axes(self, kv_quant: Optional[str] = None):
         cfg = self.cfg
+        kvq = self.kv_quant_effective(kv_quant)
         if cfg.arch_type == "ssm":
             per = ssm_mod.ssm_cache_axes()
             return {"layers": jax.tree_util.tree_map(
@@ -347,7 +361,7 @@ class Model:
                            else attn.kv_cache_axes())
             return {"layers": out}
         axes = {"layers": jax.tree_util.tree_map(
-            lambda a: (None,) + a, attn.kv_cache_axes(),
+            lambda a: (None,) + a, attn.kv_cache_axes(kvq),
             is_leaf=lambda x: isinstance(x, tuple))}
         if cfg.arch_type == "audio":
             axes["cross_k"] = (None, "batch", None, "kv_seq", None)
@@ -436,7 +450,9 @@ class Model:
                     window=window, return_kv=True)
                 h = h + z
                 c_new = _write_prefill_kv(c_l, k, v, total,
-                                          seq_lens=eff_lens)
+                                          seq_lens=eff_lens,
+                                          kv_quant=cfg.kv_quant,
+                                          group=cfg.quant_group)
                 if "cross" in p_l:
                     z = layers.rmsnorm(h, p_l["cross_norm"], cfg.norm_eps)
                     kc, vc = self._cross_kv(p_l["cross"], enc_out)
@@ -661,30 +677,44 @@ def _layer_scan(body, carry, xs, unroll: bool):
     return carry, stacked
 
 
-def _write_prefill_kv(c_l, k, v, total_len: int, seq_lens=None):
+def _write_prefill_kv(c_l, k, v, total_len: int, seq_lens=None,
+                      kv_quant: str = "bf16", group: int = 32):
     """Write prefill K/V (B, Hkv, S, hd) into the cache (ring-aware).
 
     ``seq_lens`` (B,) — per-sequence true lengths for right-padded
     batches; only valid on the non-ring path (padded prompts never
     exceed the cache window; the engine guarantees this).
+
+    Quantized caches (``k_scale`` leaf present) quantize the whole
+    prefill block at the write point — per-position groupwise along
+    head_dim, so the rows written here are bit-identical to what the
+    stepwise ``decode_step`` path would have written one at a time
+    (each position's scale depends only on its own values).
     """
+    from repro.quant.quantize import quantize_rows
+    if "k_scale" in c_l:
+        kq, ks = quantize_rows(k, kv_quant, group)
+        vq, vs = quantize_rows(v, kv_quant, group)
+        updates = {"k": kq, "v": vq, "k_scale": ks, "v_scale": vs}
+    else:
+        updates = {"k": k, "v": v}
     S_cache = c_l["k"].shape[2]
     S = k.shape[2]
-    if S <= S_cache:
-        new_k = jax.lax.dynamic_update_slice(
-            c_l["k"], k.astype(c_l["k"].dtype), (0, 0, 0, 0))
-        new_v = jax.lax.dynamic_update_slice(
-            c_l["v"], v.astype(c_l["v"].dtype), (0, 0, 0, 0))
-    else:
-        # keep the last S_cache entries, placed at slot = pos % S_cache
-        kw = k[:, :, -S_cache:]
-        vw = v[:, :, -S_cache:]
-        shift = total_len % S_cache
-        new_k = jnp.roll(kw, shift, axis=2).astype(c_l["k"].dtype)
-        new_v = jnp.roll(vw, shift, axis=2).astype(c_l["v"].dtype)
+    new = {}
+    for name, arr in updates.items():
+        tgt = c_l[name]
+        arr = arr.astype(tgt.dtype)
+        if S <= S_cache:
+            new[name] = jax.lax.dynamic_update_slice(
+                tgt, arr, (0,) * tgt.ndim)
+        else:
+            # keep the last S_cache entries, at slot = pos % S_cache
+            new[name] = jnp.roll(arr[:, :, -S_cache:],
+                                 total_len % S_cache, axis=2)
+    if S > S_cache:
         seq_lens = None        # ring path is uniform-length by contract
     adv = total_len if seq_lens is None else seq_lens
-    return dict(c_l, k=new_k, v=new_v, lens=c_l["lens"] + adv)
+    return dict(c_l, **new, lens=c_l["lens"] + adv)
 
 
 # ---------------------------------------------------------------------------

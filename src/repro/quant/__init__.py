@@ -7,9 +7,16 @@ from repro.quant.quantize import (
     pack_int4,
     unpack_int4,
     quantize_tree,
+    kv_group_size,
+    quantize_rows,
+    dequantize_rows,
+    pack_int4_rows,
+    unpack_int4_rows,
 )
 
 __all__ = [
     "QuantizedTensor", "quantize_q8_0", "quantize_q4_0", "dequantize",
     "quantize", "pack_int4", "unpack_int4", "quantize_tree",
+    "kv_group_size", "quantize_rows", "dequantize_rows",
+    "pack_int4_rows", "unpack_int4_rows",
 ]

@@ -165,6 +165,101 @@ def dequantize(qt: QuantizedTensor, dtype=jnp.bfloat16) -> jax.Array:
     return w.reshape(*lead, K, N).astype(dtype)
 
 
+# ---------------------------------------------------------------------------
+# Row-wise (last-axis) groupwise quantization — KV-cache leaves
+# ---------------------------------------------------------------------------
+#
+# Weights quantize along the reduction dim (axis -2, the matmul K); KV
+# cache entries quantize along the *feature* dim (axis -1, head_dim):
+# each cached position is written once and read many times, so the
+# scale must be local to the row being written — a plain (payload,
+# scales) array pair rather than a QuantizedTensor, because the two
+# arrays live as sibling leaves of the cache pytree (k / k_scale) and
+# ride scan / donate_argnums / cache_axes splicing like any other leaf.
+# All helpers are pure jnp and shape-static: callable from inside jit
+# (the cache-write point in ``decode_step`` / ``prefill``).
+
+def kv_group_size(dim: int, group: int, fmt: str) -> int:
+    """Effective group size for quantizing a ``dim``-wide row: the
+    largest divisor of ``dim`` that is <= ``group`` (head dims are not
+    always multiples of 32). q4_0 additionally needs ``dim`` even to
+    nibble-pack pairs along the row."""
+    if fmt == "q4_0" and dim % 2:
+        raise ValueError(
+            f"q4_0 KV rows need an even dim to pack nibbles (got {dim})")
+    g = min(group, dim)
+    while dim % g:
+        g -= 1
+    return g
+
+
+def pack_int4_rows(q: jax.Array) -> jax.Array:
+    """Pack int4 values in [-8, 7] pairwise along the LAST axis."""
+    assert q.shape[-1] % 2 == 0, q.shape
+    lo = q[..., 0::2] & 0x0F
+    hi = q[..., 1::2] & 0x0F
+    return (lo | (hi << 4)).astype(jnp.int8)
+
+
+def unpack_int4_rows(packed: jax.Array) -> jax.Array:
+    """Inverse of :func:`pack_int4_rows` → int8 values in [-8, 7]."""
+    lo = (packed & 0x0F).astype(jnp.int8)
+    hi = ((packed >> 4) & 0x0F).astype(jnp.int8)
+    lo = jnp.where(lo > 7, lo - 16, lo)
+    hi = jnp.where(hi > 7, hi - 16, hi)
+    out = jnp.stack([lo, hi], axis=-1)
+    return out.reshape(packed.shape[:-1] + (2 * packed.shape[-1],))
+
+
+def quantize_rows(x: jax.Array, fmt: str, group: int = 32
+                  ) -> Tuple[jax.Array, jax.Array]:
+    """Groupwise-quantize along the last axis.
+
+    x: (..., d) → (payload int8 (..., d) [q8_0] or (..., d//2) [q4_0],
+    scales bf16 (..., d // g)) with ``g = kv_group_size(d, group, fmt)``.
+
+    Determinism note: bf16 inputs are dyadic, so ``x / scale`` lands on
+    exact .5 ties often (the group max maps to qmax exactly). XLA-CPU's
+    compiled division (reciprocal-multiply under fast-math) can break
+    such ties one ulp differently from the eager op — so compare
+    quantized payloads *within* one compilation regime (the serving
+    engine and ``reference_decode`` are both jitted, which is why their
+    cache leaves match bit-exactly; an eager recomputation may differ
+    by one quantization step on tie elements).
+    """
+    d = x.shape[-1]
+    g = kv_group_size(d, group, fmt)
+    qmax = 127.0 if fmt == "q8_0" else 7.0
+    if fmt not in ("q8_0", "q4_0"):
+        raise ValueError(fmt)
+    xg = x.astype(jnp.float32).reshape(x.shape[:-1] + (d // g, g))
+    amax = jnp.max(jnp.abs(xg), axis=-1)
+    scale = (amax / qmax).astype(jnp.float32)
+    scale = jnp.where(scale == 0, 1.0, scale)
+    q = jnp.clip(jnp.round(xg / scale[..., None]), -qmax, qmax)
+    q = q.astype(jnp.int8).reshape(x.shape)
+    if fmt == "q4_0":
+        q = pack_int4_rows(q)
+    return q, scale.astype(jnp.bfloat16)
+
+
+def dequantize_rows(payload: jax.Array, scales: jax.Array, fmt: str,
+                    dtype=jnp.bfloat16) -> jax.Array:
+    """Inverse of :func:`quantize_rows` (group size inferred from the
+    scales' last dim)."""
+    if fmt == "q4_0":
+        q = unpack_int4_rows(payload)
+    elif fmt == "q8_0":
+        q = payload
+    else:
+        raise ValueError(fmt)
+    d = q.shape[-1]
+    g = d // scales.shape[-1]
+    qg = q.reshape(q.shape[:-1] + (d // g, g)).astype(jnp.float32)
+    x = qg * scales[..., None].astype(jnp.float32)
+    return x.reshape(q.shape).astype(dtype)
+
+
 def quantize_tree(params, fmt: str, group: int = 32,
                   predicate=None):
     """Quantize every >=2-D weight in a param pytree.

@@ -155,9 +155,26 @@ class ServingEngine:
                  admission: str = "chunked",
                  prefill_chunk: Optional[int] = None,
                  donate_carries: bool = True,
-                 quant_policy: Optional[str] = None):
+                 quant_policy: Optional[str] = None,
+                 kv_quant: Optional[str] = None):
+        # Cache precision is a serving dimension parallel to
+        # ``quant_policy`` (the *other* memory-bound decode stream — and
+        # the one that grows with context length and batch). The model's
+        # cache path keys off ``cfg.kv_quant``, so a requested format
+        # that differs from the model's config rebinds the engine to a
+        # same-params Model view with the format applied. Recurrent
+        # families (ssm/hybrid) serve bf16 state regardless
+        # (``Model.kv_quant_effective``).
+        if kv_quant is not None:
+            if kv_quant not in ("bf16", "q8_0", "q4_0"):
+                raise ValueError(
+                    f"kv_quant must be bf16|q8_0|q4_0 (got {kv_quant!r})")
+            if kv_quant != model.cfg.kv_quant:
+                model = Model(dataclasses.replace(model.cfg,
+                                                  kv_quant=kv_quant))
         self.model = model
         self.cfg = model.cfg
+        self.kv_quant = model.kv_quant_effective()
         # Quantization is a serving dimension (paper §5.3: Q4 halves the
         # memory-roofline cost of the decode GEMVs). ``quant_policy``
         # quantizes the weight pytree on entry; already-quantized leaves
@@ -252,6 +269,14 @@ class ServingEngine:
         self._stochastic_slots: set = set()
         self.queue.clear()
         self.stats = EngineStats()
+
+    def cache_nbytes(self) -> int:
+        """Device bytes of the live cache pytree (int8 payload + scale
+        leaves for quantized caches) — the measured counterpart of the
+        analytic ``cost_model.decode_carry_bytes`` / bits-per-16 ratio
+        the kv-precision bench reports."""
+        return sum(l.size * l.dtype.itemsize
+                   for l in jax.tree_util.tree_leaves(self.cache))
 
     # -- per-request sampling ----------------------------------------------
     def _req_sampling(self, req: Request):

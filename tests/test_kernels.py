@@ -203,3 +203,97 @@ def test_xla_fallback_matches_kernel():
     a = ops.decode_attention(q, k, v, lens, use_pallas=False)
     b = ops.decode_attention(q, k, v, lens, use_pallas=True)
     np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Quantized KV ring buffer (cache-write point of decode_step / prefill)
+# ---------------------------------------------------------------------------
+
+def _ring_cfg(head_dim, num_kv_heads=2, quant_group=32):
+    from repro.configs.base import ModelConfig
+    return ModelConfig(name="ring-test", d_model=head_dim * num_kv_heads,
+                       num_heads=num_kv_heads, num_kv_heads=num_kv_heads,
+                       head_dim=head_dim, quant_group=quant_group)
+
+
+@pytest.mark.parametrize("fmt", ["q8_0", "q4_0"])
+@pytest.mark.parametrize("window,head_dim", [(4, 32),   # aligned
+                                             (5, 24),   # both unaligned
+                                             (7, 48)])  # window > group? no:
+def test_quantized_ring_wraparound_writes(fmt, window, head_dim):
+    """Sliding-window ring semantics survive quantization: writing more
+    rows than the window holds leaves each final slot equal to the
+    round-trip quantization of the *last* row written there, including
+    non-group-aligned window and head dims. The expectation quantizes
+    under jit like the write path does — XLA-CPU's compiled division
+    breaks exact .5 rounding ties differently from the eager op (see
+    quantize_rows), and bf16 rows hit such ties routinely."""
+    from repro.models import attention as attn
+    from repro.quant import dequantize_rows, quantize_rows
+    cfg = _ring_cfg(head_dim)
+    B, Hkv, hd = 2, cfg.num_kv_heads, cfg.head_dim
+    cache = attn.init_kv_cache(cfg, B, max_len=64, window=window,
+                               kv_quant=fmt)
+    assert cache["k"].dtype == jnp.int8
+    n_writes = 3 * window  # wraps the ring twice
+    rows = jax.random.normal(jax.random.PRNGKey(0),
+                             (n_writes, B, Hkv, hd), jnp.bfloat16)
+    write = jax.jit(lambda c, k, v, slot: attn.kv_cache_write(
+        c, k, v, slot, kv_quant=fmt, group=cfg.quant_group))
+    roundtrip = jax.jit(lambda x: dequantize_rows(
+        *quantize_rows(x, fmt, cfg.quant_group), fmt))
+    for i in range(n_writes):
+        slot = jnp.full((B,), i % window, jnp.int32)
+        cache = dict(cache, **write(cache, rows[i], rows[i], slot))
+    k_read, _ = attn.kv_cache_read(cache, kv_quant=fmt)
+    for s in range(window):
+        last = n_writes - window + s  # last write landing in slot s
+        np.testing.assert_array_equal(
+            np.asarray(k_read[:, :, s], np.float32),
+            np.asarray(roundtrip(rows[last]), np.float32))
+
+
+@pytest.mark.parametrize("fmt", ["q8_0", "q4_0"])
+def test_quantized_prefill_write_matches_stepwise(fmt):
+    """The fused-prefill cache write (_write_prefill_kv) and the
+    one-row-at-a-time decode write produce bit-identical quantized
+    leaves — the invariant that keeps both admission modes pinned to
+    the same reference stream (each position's scale depends only on
+    its own values)."""
+    from repro.models import attention as attn
+    from repro.models.model import _write_prefill_kv
+    cfg = _ring_cfg(32)
+    B, Hkv, hd, S = 2, cfg.num_kv_heads, cfg.head_dim, 6
+    kv = jax.random.normal(jax.random.PRNGKey(1), (B, Hkv, S, hd),
+                           jnp.bfloat16)
+    fused = attn.init_kv_cache(cfg, B, max_len=8, kv_quant=fmt)
+    fused = jax.jit(lambda c, x: _write_prefill_kv(
+        c, x, x, S, kv_quant=fmt, group=cfg.quant_group))(fused, kv)
+    step = attn.init_kv_cache(cfg, B, max_len=8, kv_quant=fmt)
+    write = jax.jit(lambda c, x, slot: attn.kv_cache_write(
+        c, x, x, slot, kv_quant=fmt, group=cfg.quant_group))
+    for i in range(S):
+        slot = jnp.full((B,), i, jnp.int32)
+        step = dict(step, **write(step, kv[:, :, i], slot))
+    for name in ("k", "v", "k_scale", "v_scale"):
+        np.testing.assert_array_equal(
+            np.asarray(fused[name][:, :, :S], np.float32),
+            np.asarray(step[name][:, :, :S], np.float32), err_msg=name)
+
+
+def test_bf16_ring_write_read_unchanged():
+    """kv_cache_write/read on a bf16 cache are the plain set/passthrough
+    the pre-kv-quant decode path used."""
+    from repro.models import attention as attn
+    cfg = _ring_cfg(32)
+    B = 2
+    cache = attn.init_kv_cache(cfg, B, max_len=4)
+    row = jax.random.normal(jax.random.PRNGKey(2),
+                            (B, cfg.num_kv_heads, cfg.head_dim),
+                            jnp.bfloat16)
+    cache = dict(cache, **attn.kv_cache_write(
+        cache, row, row, jnp.zeros((B,), jnp.int32)))
+    k_read, v_read = attn.kv_cache_read(cache)
+    assert k_read is cache["k"] and v_read is cache["v"]
+    np.testing.assert_array_equal(np.asarray(k_read[:, :, 0], np.float32),
+                                  np.asarray(row, np.float32))

@@ -6,8 +6,9 @@ import pytest
 from _hypothesis_compat import given, settings, st
 
 from repro.quant import (
-    dequantize, pack_int4, quantize, quantize_q4_0, quantize_q8_0,
-    quantize_tree, unpack_int4,
+    dequantize, dequantize_rows, kv_group_size, pack_int4,
+    pack_int4_rows, quantize, quantize_q4_0, quantize_q8_0,
+    quantize_rows, quantize_tree, unpack_int4, unpack_int4_rows,
 )
 
 
@@ -118,6 +119,79 @@ def test_shape_tracks_scan_over_layers_slicing(fmt):
     assert q0.shape == (64, 16)
     np.testing.assert_allclose(np.asarray(dequantize(q0, jnp.float32)),
                                np.asarray(dequantize(qt, jnp.float32))[0])
+
+
+# ---------------------------------------------------------------------------
+# Row-wise (KV-cache) groupwise quantization
+# ---------------------------------------------------------------------------
+
+# Per-format round-trip tolerance table for KV rows (max relative
+# error vs the row's own max-abs). q8_0: 1/254 quantization step +
+# bf16 scale rounding; q4_0: 1/14 step dominates — same bounds as the
+# weight-path table above, the grouping axis just moved to the row.
+KV_ROUNDTRIP_TOL = {"q8_0": 0.02, "q4_0": 0.12}
+
+
+@pytest.mark.parametrize("dim", [16, 24, 32, 48, 64, 96])
+@pytest.mark.parametrize("fmt", ["q8_0", "q4_0"])
+def test_kv_rows_roundtrip_error_bound(dim, fmt):
+    """quantize_rows→dequantize_rows round-trip within the per-format
+    tolerance, including non-group-aligned head dims (24, 48: not
+    multiples of the default group 32)."""
+    x = jax.random.normal(jax.random.PRNGKey(dim), (2, 3, 5, dim),
+                          jnp.float32)
+    payload, scales = quantize_rows(x, fmt)
+    xr = dequantize_rows(payload, scales, fmt, jnp.float32)
+    rel = np.abs(np.asarray(xr - x)).max() / np.abs(np.asarray(x)).max()
+    assert rel < KV_ROUNDTRIP_TOL[fmt], (fmt, dim, rel)
+
+
+def test_kv_group_size_rules():
+    """Effective group: largest divisor of the row dim <= the nominal
+    group; q4_0 needs an even dim to nibble-pack."""
+    assert kv_group_size(64, 32, "q8_0") == 32
+    assert kv_group_size(48, 32, "q8_0") == 24
+    assert kv_group_size(20, 32, "q4_0") == 20
+    assert kv_group_size(7, 32, "q8_0") == 7
+    with pytest.raises(ValueError):
+        kv_group_size(15, 32, "q4_0")
+    with pytest.raises(ValueError):
+        quantize_rows(jnp.ones((4, 15)), "q4_0")
+
+
+@given(st.integers(0, 2**32 - 1))
+@settings(max_examples=15, deadline=None)
+def test_pack_unpack_rows_roundtrip(seed):
+    q = jax.random.randint(jax.random.PRNGKey(seed), (3, 4, 32), -8, 8,
+                           jnp.int8)
+    assert (unpack_int4_rows(pack_int4_rows(q)) == q).all()
+
+
+def test_kv_rows_bytes_match_format_bits():
+    """Payload + scale bytes per cached position = bits_per_weight/16
+    of the bf16 footprint (paper fn.1 applied to the cache stream)."""
+    x = jnp.ones((4, 64))
+    bf16_bytes = x.size * 2
+    for fmt, bits in (("q8_0", 8.5), ("q4_0", 4.5)):
+        payload, scales = quantize_rows(x, fmt)
+        nbytes = (payload.size * payload.dtype.itemsize
+                  + scales.size * scales.dtype.itemsize)
+        assert nbytes / bf16_bytes == pytest.approx(bits / 16)
+
+
+def test_kv_rows_positionwise_independence():
+    """Each row quantizes independently (scale depends only on its own
+    values) — the property that makes fused-prefill and stepwise cache
+    writes produce bit-identical quantized leaves."""
+    x = jax.random.normal(jax.random.PRNGKey(3), (2, 6, 32), jnp.float32)
+    p_full, s_full = quantize_rows(x, "q8_0")
+    for i in range(x.shape[1]):
+        p_i, s_i = quantize_rows(x[:, i], "q8_0")
+        np.testing.assert_array_equal(np.asarray(p_full[:, i]),
+                                      np.asarray(p_i))
+        np.testing.assert_array_equal(
+            np.asarray(s_full[:, i], np.float32),
+            np.asarray(s_i, np.float32))
 
 
 def test_quantized_tensor_checkpoint_roundtrip(tmp_path):

@@ -337,3 +337,123 @@ def test_plan_decode_sets_admission_and_donation():
     p_bf = plan(cfg, INPUT_SHAPES["decode_32k"], TPU_V5E,
                 avg_prompt_len=32, allow_quant=False)
     assert p_bf.quant_policy == "bf16"
+
+
+# ---------------------------------------------------------------------------
+# KV-cache quantization (PR-4): structure, engine param, planner
+# ---------------------------------------------------------------------------
+
+KV_FORMATS = ("bf16", "q8_0", "q4_0")
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+@pytest.mark.parametrize("kv", KV_FORMATS)
+def test_cache_axes_match_cache_structure(arch, kv):
+    """Regression (the PR-3 stale-aux bug class, for caches): every
+    data leaf ``init_cache`` creates — including the new
+    ``k_scale``/``v_scale`` leaves — must have a matching ``cache_axes``
+    entry of the same rank naming a batch axis, across all four cache
+    families × every kv format. A missing/short axis entry breaks the
+    engine's prefill splicing and admission reset silently."""
+    import dataclasses
+    cfg = dataclasses.replace(reduced(get_config(arch)), kv_quant=kv)
+    m = Model(cfg)
+    cache = m.init_cache(2, 64)
+    axes = m.cache_axes()
+    c_leaves = jax.tree_util.tree_flatten_with_path(cache)[0]
+    a_leaves = jax.tree_util.tree_flatten_with_path(
+        axes, is_leaf=lambda x: isinstance(x, tuple))[0]
+    c_paths = [jax.tree_util.keystr(p) for p, _ in c_leaves]
+    a_paths = [jax.tree_util.keystr(p) for p, _ in a_leaves]
+    assert c_paths == a_paths, (arch, kv)
+    for (path, leaf), (_, ax) in zip(c_leaves, a_leaves):
+        assert len(ax) == leaf.ndim, (arch, kv, path, ax, leaf.shape)
+        assert ax.count("batch") == 1, (arch, kv, path, ax)
+    if kv != "bf16" and cfg.arch_type not in ("ssm", "hybrid"):
+        assert any("k_scale" in p for p in c_paths), (arch, kv)
+
+
+def test_engine_kv_quant_param_rebinds_model():
+    """ServingEngine(kv_quant=...) on a bf16-config model serves a
+    quantized cache (int8 leaves + scale siblings) and stays
+    token-identical to the rebound model's reference loop."""
+    cfg = reduced(get_config("deepseek-7b"), d_model=64, d_ff=128,
+                  vocab_size=256, num_heads=2, num_kv_heads=1)
+    m = Model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="kv_quant"):
+        ServingEngine(m, params, slots=1, max_len=64, kv_quant="int3")
+    eng = ServingEngine(m, params, slots=2, max_len=64, megastep_k=4,
+                        kv_quant="q8_0")
+    assert eng.cfg.kv_quant == "q8_0" and eng.kv_quant == "q8_0"
+    assert any(l.dtype == jnp.int8
+               for l in jax.tree_util.tree_leaves(eng.cache))
+    # bits/16: int8 payload + groupwise scales vs the bf16 cache
+    bf16_eng = ServingEngine(m, params, slots=2, max_len=64)
+    ratio = eng.cache_nbytes() / bf16_eng.cache_nbytes()
+    assert abs(ratio - 8.5 / 16) < 0.02, ratio
+    req = Request(uid=0, prompt=np.asarray([3, 1, 4, 1, 5], np.int32),
+                  max_new_tokens=5)
+    eng.submit(req)
+    eng.run()
+    assert req.output == eng.model.reference_decode(params, req.prompt, 5)
+
+
+def test_engine_kv_quant_noop_for_recurrent():
+    """kv_quant on an SSM engine changes nothing: same bf16 cache
+    structure, same tokens."""
+    cfg = reduced(get_config("mamba2-2.7b"))
+    m = Model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    outs = {}
+    for kv in ("bf16", "q4_0"):
+        eng = ServingEngine(m, params, slots=1, max_len=64, kv_quant=kv)
+        assert eng.kv_quant == "bf16"
+        assert all(l.dtype != jnp.int8
+                   for l in jax.tree_util.tree_leaves(eng.cache))
+        req = Request(uid=0, prompt=np.asarray([2, 7, 1], np.int32),
+                      max_new_tokens=4)
+        eng.submit(req)
+        eng.run()
+        outs[kv] = req.output
+    assert outs["bf16"] == outs["q4_0"]
+
+
+def test_plan_and_simulator_carry_kv_quant():
+    """dispatch.plan emits kv_quant beside megastep_k/admission/
+    quant_policy (quality-floor veto + recurrent no-op), and
+    simulate_kv_precision predicts the context-scaling win."""
+    from repro.core import TPU_V5E, a17_cpu, plan, simulate_kv_precision
+    from repro.configs.base import INPUT_SHAPES
+    cfg = get_config("deepseek-7b")
+    p = plan(cfg, INPUT_SHAPES["decode_32k"], TPU_V5E, avg_prompt_len=32)
+    assert p.kv_quant == "q4_0"           # compute-rich TPU: 4.5 bits win
+    assert "kv_quant=" in p.summary()
+    # applying the plan to a ModelConfig must carry the cache precision
+    # (config_overrides is the documented way to consume a plan)
+    assert p.config_overrides()["kv_quant"] == "q4_0"
+    p_floor = plan(cfg, INPUT_SHAPES["decode_32k"], TPU_V5E,
+                   avg_prompt_len=32, quality_floor_bits=8.0)
+    assert p_floor.kv_quant == "q8_0"
+    p_off = plan(cfg, INPUT_SHAPES["decode_32k"], TPU_V5E,
+                 avg_prompt_len=32, allow_quant=False)
+    assert p_off.kv_quant == "bf16"
+    p_train = plan(cfg, INPUT_SHAPES["train_4k"], TPU_V5E)
+    assert p_train.kv_quant == "bf16"     # no decode loop to feed
+    p_ssm = plan(get_config("mamba2-2.7b"), INPUT_SHAPES["decode_32k"],
+                 TPU_V5E, avg_prompt_len=32)
+    assert p_ssm.kv_quant == "bf16"       # recurrent: contract no-op
+
+    hw = a17_cpu(2)
+    sim = simulate_kv_precision(cfg, hw, kv_lens=(64, 32768), ks=(8,))
+    gain = lambda fmt, kvl: (sim[fmt][kvl][8].tokens_per_s
+                             / sim["bf16"][kvl][8].tokens_per_s)
+    # the cache-stream win exists at long context and grows with it
+    assert gain("q8_0", 32768) > 1.02
+    assert gain("q8_0", 32768) > gain("q8_0", 64)
+    assert gain("q4_0", 32768) > 1.0
+    # recurrent families: all formats predict identically (no-op)
+    simr = simulate_kv_precision(get_config("recurrentgemma-2b"), hw,
+                                 kv_lens=(4096,), ks=(8,))
+    assert simr["q4_0"][4096][8].tokens_per_s == \
+        simr["bf16"][4096][8].tokens_per_s

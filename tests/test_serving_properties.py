@@ -8,7 +8,11 @@ greedy decoding to a single-request reference decode loop
 queue depths — and across weight precisions: the quantized tests hold
 a q8_0/q4_0 engine to the reference run under the *same* quantized
 params (tolerance-aware in the sense that quantization may legally
-change tokens vs bf16, but never engine-vs-reference). Runs under
+change tokens vs bf16, but never engine-vs-reference). The KV-cache
+precision dimension (``cfg.kv_quant``) gets the same treatment: a
+quantized-cache engine is pinned to the quantized-cache reference
+across all four cache families and both admission modes, and is a
+verified no-op for the recurrent families. Runs under
 ``tests/_hypothesis_compat``: with hypothesis installed it uses the
 deterministic ``repro_ci`` profile; without it, the shim's seeded
 fallback runner draws the same examples every time.
@@ -17,6 +21,7 @@ Engines and models are cached per configuration (``ServingEngine.reset``
 keeps compiled executables), so each example pays jit cost only once
 per (arch, slots, K, admission) combination.
 """
+import dataclasses
 import os
 
 import jax
@@ -34,13 +39,14 @@ from repro.serving import (Request, SamplingConfig, ServingEngine,
 ARCHS = ("deepseek-7b", "mistral-nemo-12b", "mamba2-2.7b",
          "recurrentgemma-2b")
 QUANTS = ("q8_0", "q4_0")
+RECURRENT_ARCHS = ("mamba2-2.7b", "recurrentgemma-2b")
 
 _MODELS = {}
 _ENGINES = {}
 
 
-def _model(arch, quant="bf16"):
-    key = (arch, quant)
+def _model(arch, quant="bf16", kv="bf16"):
+    key = (arch, quant, kv)
     if key not in _MODELS:
         cfg = reduced(get_config(arch))
         if cfg.arch_type == "dense":
@@ -48,6 +54,8 @@ def _model(arch, quant="bf16"):
             # stay at reduced() (their state shapes don't shrink well)
             cfg = reduced(get_config(arch), d_model=64, d_ff=128,
                           vocab_size=256, num_heads=2, num_kv_heads=1)
+        if kv != "bf16":
+            cfg = dataclasses.replace(cfg, kv_quant=kv)
         m = Model(cfg)
         params = m.init(jax.random.PRNGKey(0))
         if quant != "bf16":
@@ -56,10 +64,10 @@ def _model(arch, quant="bf16"):
     return _MODELS[key]
 
 
-def _engine(arch, slots, k, mode, quant="bf16") -> ServingEngine:
-    key = (arch, slots, k, mode, quant)
+def _engine(arch, slots, k, mode, quant="bf16", kv="bf16") -> ServingEngine:
+    key = (arch, slots, k, mode, quant, kv)
     if key not in _ENGINES:
-        cfg, m, params = _model(arch, quant)
+        cfg, m, params = _model(arch, quant, kv)
         _ENGINES[key] = ServingEngine(
             m, params, slots=slots, max_len=64, megastep_k=k,
             admission=mode, prefill_chunk=16)
@@ -216,6 +224,90 @@ def test_quantized_megastep_k_invariance(seed, quant, k):
         eng.run()
         outs[kk] = [r.output for r in reqs]
     assert outs[1] == outs[k], (quant, k)
+
+
+@given(st.integers(0, 2 ** 31 - 1), st.sampled_from(QUANTS),
+       st.sampled_from([1, 4, 8]))
+@settings(max_examples=3, deadline=None)
+def test_kv_quant_engine_matches_reference(seed, kv, k):
+    """KV-cache precision property (the PR-4 tentpole): a q8_0/q4_0
+    cache may legally change *which* greedy tokens come out relative to
+    bf16 (roundtrip drift through the attention read), but the engine
+    must stay token-identical to ``Model.reference_decode`` run with
+    the *same* ``cfg.kv_quant`` — same quantized cache-write path —
+    across all four cache families × both admission modes × megastep
+    K ∈ {1, 4, 8}. As with q4_0 weights (ROADMAP PR-3 note), each
+    admission mode is pinned to its own prefill path's reference
+    (fused-prefill and stepwise cache writes quantize identically for
+    attention archs, but the recurrent families' bf16 no-op path keeps
+    the associative-vs-sequential gap)."""
+    rng = np.random.default_rng(seed)
+    for arch in ARCHS:
+        cfg, m, params = _model(arch, kv=kv)
+        for mode in ("chunked", "stall"):
+            reqs = _random_requests(cfg, rng, 2, max_prompt=8,
+                                    max_new_hi=6)
+            eng = _engine(arch, 2, k, mode, kv=kv)
+            for r in reqs:
+                eng.submit(r)
+            eng.run()
+            for r in reqs:
+                assert r.done
+                ref = m.reference_decode(
+                    params, r.prompt, r.max_new_tokens,
+                    stepwise_prefill=(mode == "chunked"))
+                assert r.output == ref, (arch, mode, kv, k, r.uid,
+                                         r.output, ref)
+
+
+@given(st.integers(0, 2 ** 31 - 1), st.sampled_from(QUANTS))
+@settings(max_examples=2, deadline=None)
+def test_kv_quant_noop_for_recurrent_families(seed, kv):
+    """SSM / RG-LRU state leaves stay bf16 under any ``kv_quant``
+    (recurrent state is small and precision-sensitive): structurally —
+    no int8 leaf appears in the cache — and behaviourally — the token
+    streams are identical to the bf16-cache engine's."""
+    rng = np.random.default_rng(seed)
+    for arch in RECURRENT_ARCHS:
+        cfg, m, params = _model(arch, kv=kv)
+        assert m.kv_quant_effective() == "bf16"
+        cache = m.init_cache(2, 64)
+        assert all(l.dtype != jnp.int8
+                   for l in jax.tree_util.tree_leaves(cache)), arch
+        reqs_spec = [(rng.integers(1, cfg.vocab_size, size=int(
+            rng.integers(1, 10))).astype(np.int32),
+            int(rng.integers(1, 8))) for _ in range(2)]
+        outs = {}
+        for kv_mode in ("bf16", kv):
+            eng = _engine(arch, 2, 8, "chunked", kv=kv_mode)
+            reqs = [Request(uid=i, prompt=p, max_new_tokens=n)
+                    for i, (p, n) in enumerate(reqs_spec)]
+            for r in reqs:
+                eng.submit(r)
+            eng.run()
+            outs[kv_mode] = [r.output for r in reqs]
+        assert outs["bf16"] == outs[kv], (arch, kv)
+
+
+@given(st.integers(0, 2 ** 31 - 1), st.sampled_from(QUANTS))
+@settings(max_examples=3, deadline=None)
+def test_kv_quant_eos_retires_at_reference_position(seed, kv):
+    """EOS positions under a quantized cache: pick an EOS from the
+    quantized-cache reference stream; the engine must stop exactly
+    there, wherever it lands inside a megastep block."""
+    cfg, m, params = _model("deepseek-7b", kv=kv)
+    rng = np.random.default_rng(seed)
+    prompt = rng.integers(1, cfg.vocab_size, size=int(
+        rng.integers(1, 14))).astype(np.int32)
+    ref = m.reference_decode(params, prompt, 16)
+    eos = ref[int(rng.integers(0, len(ref)))]
+    idx = ref.index(eos)
+    eng = _engine("deepseek-7b", 2, 4, "chunked", kv=kv)
+    req = Request(uid=0, prompt=prompt, max_new_tokens=16, eos_id=eos)
+    eng.submit(req)
+    eng.run()
+    assert req.done
+    assert req.output == ref[:idx + 1]
 
 
 @given(st.integers(0, 2 ** 31 - 1), st.floats(0.5, 2.0))
