@@ -1,12 +1,16 @@
 #!/usr/bin/env bash
-# Tier-1 verification wrapper: the full pytest suite (including the
-# serving property suite, tests/test_serving_properties.py) with a
-# pinned hypothesis seed/profile so runs are deterministic in CI —
-# followed by seeded q4_0 weight-quant and q8_0 kv-cache serving
-# smokes and a schema check of the committed BENCH_serving.json (the
-# precision and kv_precision sections must be present:
-# benchmarks/serving_bench.py --sweep precision / --sweep kv write
+# Tier-1 verification wrapper: the pytest suite with a pinned
+# hypothesis seed/profile so runs are deterministic in CI — followed
+# by seeded q4_0 weight-quant and q8_0 kv-cache serving smokes and a
+# schema check of the committed BENCH_serving.json (the precision,
+# kv_precision and kernel_backend sections must be present:
+# benchmarks/serving_bench.py --sweep precision|kv|kernels writes
 # them).
+#
+# By default the *fast* tier runs: pytest.ini excludes tests marked
+# `slow` (the cross-arch serving property sweeps that push the full
+# suite to ~24 min on this container). Pass --full to clear the
+# marker filter and run everything — the pre-merge tier.
 #
 # With hypothesis installed, tests/_hypothesis_compat.py loads a
 # derandomized profile; without it (this container), the compat shim's
@@ -14,7 +18,7 @@
 # REPRO_HYP_SEED. REPRO_HYP_EXAMPLES caps examples per property test
 # (useful for quick smokes: REPRO_HYP_EXAMPLES=2 scripts/run_tier1.sh).
 #
-# Usage: scripts/run_tier1.sh [extra pytest args...]
+# Usage: scripts/run_tier1.sh [--full] [extra pytest args...]
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -22,7 +26,13 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 export REPRO_HYP_SEED="${REPRO_HYP_SEED:-0}"
 export REPRO_PALLAS_INTERPRET="${REPRO_PALLAS_INTERPRET:-1}"
 
-python -m pytest -x -q "$@"
+MARKER_ARGS=()
+if [[ "${1:-}" == "--full" ]]; then
+    shift
+    MARKER_ARGS=(-m "")     # clear pytest.ini's "not slow" filter
+fi
+
+python -m pytest -x -q "${MARKER_ARGS[@]}" "$@"
 
 echo "[tier1] q4_0 quantized-serving smoke (seeded)"
 python - <<'EOF'
@@ -92,7 +102,7 @@ python - <<'EOF'
 import json, pathlib
 bench = json.loads(pathlib.Path("BENCH_serving.json").read_text())
 for key in ("per_k", "k8_over_k1_decode", "mixed_workload", "precision",
-            "kv_precision"):
+            "kv_precision", "kernel_backend"):
     assert key in bench, f"BENCH_serving.json missing section: {key}"
 prec = bench["precision"]
 for key in ("formats", "q4_over_bf16_k8_decode", "analytic_a17_2t"):
@@ -120,6 +130,21 @@ for fmt in ("bf16", "q8_0", "q4_0"):
         (fmt, row["cache_bytes_ratio"])
     assert row["greedy_equiv_k8_k1"] is True, \
         f"kv {fmt}: greedy K-invariance broken"
+kb = bench["kernel_backend"]
+for key in ("formats", "analytic_tpu_v5e_decode_32k",
+            "q4_flip_predicted"):
+    assert key in kb, f"kernel_backend section missing key: {key}"
+for fmt in ("q8_0", "q4_0"):
+    row = kb["formats"][fmt]
+    for be in ("xla", "pallas"):
+        assert row[be]["decode_tok_s"] > 0, (fmt, be)
+    # the fused-kernel contract: backend choice never changes tokens
+    assert row["greedy_equiv_xla_pallas"] is True, \
+        f"kernel_backend {fmt}: xla/pallas token streams diverged"
+# the planner's predicted ordering flip (xla -> q8_0, pallas -> q4_0)
+assert kb["analytic_tpu_v5e_decode_32k"]["xla"]["kv_quant"] == "q8_0"
+assert kb["analytic_tpu_v5e_decode_32k"]["pallas"]["kv_quant"] == "q4_0"
+assert kb["q4_flip_predicted"] is True
 print("[tier1] BENCH_serving.json schema OK "
       f"(q4/bf16 @K8 decode = {prec['q4_over_bf16_k8_decode']}; "
       f"kv q8/bf16 @K8 = {kv['q8_over_bf16_k8_decode']})")

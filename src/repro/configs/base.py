@@ -104,6 +104,12 @@ class ModelConfig:
     # precision-sensitive, see Model.kv_quant_effective().
     kv_quant: str = "bf16"         # cache precision: bf16|q8_0|q4_0
     use_pallas: bool = False       # use Pallas kernels (interpret on CPU)
+    # Kernel backend: one switch for the whole fused-dequant path
+    # (quant_matmul decode GEMVs + the quantized-KV decode-attention
+    # kernel). "" (default) derives from use_pallas for backwards
+    # compatibility; an explicit "pallas"/"xla" wins and rewrites
+    # use_pallas to match, so call sites keep reading cfg.use_pallas.
+    kernels: str = ""              # ""|"xla"|"pallas"
     remat: bool = True             # activation checkpointing per layer
     # Cost-calibration mode (launch/dryrun.py): python-loop the layer
     # stack and unroll inner scans so XLA cost_analysis counts every
@@ -125,6 +131,17 @@ class ModelConfig:
         if self.scheduler_version == "v0":
             object.__setattr__(self, "fuse_qkv", False)
             object.__setattr__(self, "fuse_gate_up", False)
+        # kernels is the one public switch; reconcile with the legacy
+        # use_pallas bool (kernels wins when set, derives otherwise)
+        if self.kernels == "":
+            object.__setattr__(self, "kernels",
+                               "pallas" if self.use_pallas else "xla")
+        elif self.kernels in ("xla", "pallas"):
+            object.__setattr__(self, "use_pallas", self.kernels == "pallas")
+        else:
+            raise ValueError(
+                f"kernels must be '', 'xla' or 'pallas', got "
+                f"{self.kernels!r}")
 
     # --- derived quantities ----------------------------------------------
     @property

@@ -236,7 +236,8 @@ def quantized_per_token_s(per_token_s: float, hw: HardwareSpec,
                           weight_bytes: float = 0.0,
                           weight_format: str = "bf16",
                           cache_bytes: float = 0.0,
-                          kv_format: str = "bf16") -> float:
+                          kv_format: str = "bf16",
+                          kernel_backend: str = "pallas") -> float:
     """Adjust a bf16-calibrated per-token decode time for weight and/or
     KV-cache precision (paper §5.3: quantization is the single largest
     lever because decode GEMVs are weight-stream-bound; the cache is
@@ -254,6 +255,13 @@ def quantized_per_token_s(per_token_s: float, hw: HardwareSpec,
     stream's share of the bytes (or use the graph-level
     ``scheduler.simulate_precision`` / ``simulate_kv_precision``,
     which model the split).
+
+    ``kernel_backend`` selects how the dequant is *executed*:
+    ``"pallas"`` (default — the formulas this module has always used)
+    models fused in-register dequant streaming only the quantized
+    bytes; ``"xla"`` charges each stream its materialized-unpack bytes
+    on top (``PrecisionFormat.effective_stream_ratio``) — the measured
+    PR-4 regime where q4_0 KV decoded at 0.75-0.81x bf16.
     """
     saved = 0.0
     dequant = 0.0
@@ -262,7 +270,8 @@ def quantized_per_token_s(per_token_s: float, hw: HardwareSpec,
         if not nbytes or fname in ("bf16", "f16", "f32"):
             continue
         fmt = get_format(fname)
-        saved += nbytes * (1.0 - fmt.stream_ratio) \
+        ratio = fmt.effective_stream_ratio(kernel_backend)
+        saved += nbytes * (1.0 - ratio) \
             / (hw.mem_bw * hw.mem_efficiency)
         dequant += fmt.dequant_flops_per_weight * (nbytes / 2.0) \
             / (hw.peak_flops * hw.flop_efficiency)
@@ -275,7 +284,8 @@ def megastep_time(per_token_s: float, hw: HardwareSpec, k: int = 1, *,
                   weight_bytes: float = 0.0,
                   weight_format: str = "bf16",
                   cache_bytes: float = 0.0,
-                  kv_format: str = "bf16") -> float:
+                  kv_format: str = "bf16",
+                  kernel_backend: str = "pallas") -> float:
     """Wall time of one K-token serving megastep: one host dispatch +
     K device-resident decode iterations. The per-token dispatch share
     ``dispatch_overhead_s / k`` is the lever the paper's §5 CPU-vs-GPU
@@ -298,7 +308,7 @@ def megastep_time(per_token_s: float, hw: HardwareSpec, k: int = 1, *,
     """
     per_token_s = quantized_per_token_s(per_token_s, hw, weight_bytes,
                                         weight_format, cache_bytes,
-                                        kv_format)
+                                        kv_format, kernel_backend)
     boundary = 0.0 if donate_carries else \
         carry_bytes / (hw.mem_bw * hw.mem_efficiency)
     return hw.dispatch_overhead_s + boundary + k * per_token_s
@@ -310,14 +320,16 @@ def megastep_tokens_per_s(per_token_s: float, hw: HardwareSpec,
                           weight_bytes: float = 0.0,
                           weight_format: str = "bf16",
                           cache_bytes: float = 0.0,
-                          kv_format: str = "bf16") -> float:
+                          kv_format: str = "bf16",
+                          kernel_backend: str = "pallas") -> float:
     return tokens_per_second(
         megastep_time(per_token_s, hw, k, carry_bytes=carry_bytes,
                       donate_carries=donate_carries,
                       weight_bytes=weight_bytes,
                       weight_format=weight_format,
                       cache_bytes=cache_bytes,
-                      kv_format=kv_format), k)
+                      kv_format=kv_format,
+                      kernel_backend=kernel_backend), k)
 
 
 # ---------------------------------------------------------------------------
@@ -371,7 +383,8 @@ def roofline(hlo_flops: float, hlo_bytes: float, collective_bytes: float,
              weight_hlo_bytes: float = 0.0,
              weight_format: str = "bf16",
              kv_cache_bytes: float = 0.0,
-             kv_format: str = "bf16") -> RooflineTerms:
+             kv_format: str = "bf16",
+             kernel_backend: str = "pallas") -> RooflineTerms:
     """The brief's three terms, plus an optional dispatch term.
 
     FLOPs/bytes from ``compiled.cost_analysis()`` are *per device* under
@@ -389,6 +402,12 @@ def roofline(hlo_flops: float, hlo_bytes: float, collective_bytes: float,
     apply the identical rescale to the KV-cache share of ``hlo_bytes``
     — the second memory stream, dominant at long context where the
     paper's CPU-vs-GPU crossover lives.
+
+    ``kernel_backend`` picks the dequant execution model: the default
+    ``"pallas"`` streams quantized bytes only (fused in-register
+    dequant — the formulas below are unchanged from earlier PRs);
+    ``"xla"`` charges the materialized bf16 unpack on top via
+    ``PrecisionFormat.effective_stream_ratio``.
     """
     mem_bytes, flops = hlo_bytes, hlo_flops
     for nbytes, fname in ((weight_hlo_bytes, weight_format),
@@ -396,7 +415,8 @@ def roofline(hlo_flops: float, hlo_bytes: float, collective_bytes: float,
         if not nbytes or fname in ("bf16", "f16", "f32"):
             continue
         fmt = get_format(fname)
-        mem_bytes -= nbytes * (1.0 - fmt.stream_ratio)
+        mem_bytes -= nbytes * (1.0 - fmt.effective_stream_ratio(
+            kernel_backend))
         flops += fmt.dequant_flops_per_weight * (nbytes / 2.0)
     return RooflineTerms(
         compute_s=flops / hw.peak_flops,

@@ -73,16 +73,29 @@ class ExecutionPlan:
     # plan's context length. Always bf16 for recurrent families
     # (ssm/hybrid) — the engine treats kv_quant as a no-op there.
     kv_quant: str = "bf16"
+    # Which dequant execution the plan was priced against: "pallas"
+    # (fused in-register dequant — quant_matmul + the quantized decode-
+    # attention kernel) or "xla" (materialized bf16 unpack before the
+    # consuming op). The backend changes the *cost* of every quantized
+    # stream, so it re-ranks quant_policy / kv_quant: under "xla" the
+    # q4_0 unpack tax hands both wins to q8_0 on bandwidth-rich parts.
+    kernel_backend: str = "pallas"
 
     def config_overrides(self) -> Dict:
         """Overrides to apply to the ModelConfig for this plan."""
+        # ``kernels`` wins over ``use_pallas`` in ModelConfig's
+        # __post_init__, so emit the pair consistently: the fused path
+        # only lights up when the plan priced it AND some GEMM wants it.
+        use_pallas = (self.kernel_backend == "pallas"
+                      and any(d.use_pallas for d in self.decisions))
         return dict(
             scheduler_version=self.scheduler_version,
             fuse_qkv=self.fuse_qkv,
             fuse_gate_up=self.fuse_gate_up,
             quant_policy=self.quant_policy,
             kv_quant=self.kv_quant,
-            use_pallas=any(d.use_pallas for d in self.decisions),
+            use_pallas=use_pallas,
+            kernels="pallas" if use_pallas else "xla",
         )
 
     def summary(self) -> str:
@@ -93,7 +106,8 @@ class ExecutionPlan:
                  f"admission={self.admission} "
                  f"donate={self.donate_carries} "
                  f"quant={self.quant_policy} "
-                 f"kv_quant={self.kv_quant}"]
+                 f"kv_quant={self.kv_quant} "
+                 f"kernels={self.kernel_backend}"]
         for d in self.decisions:
             lines.append(
                 f"  {d.tag:<10} AI={d.arithmetic_intensity:9.1f} "
@@ -108,14 +122,26 @@ def plan(cfg: ModelConfig, shape: InputShape,
          quality_floor_bits: float = 4.5,
          arrival_rate_per_s: float = 0.0,
          avg_prompt_len: int = 0,
-         max_new: int = 32) -> ExecutionPlan:
+         max_new: int = 32,
+         kernel_backend: str = "pallas") -> ExecutionPlan:
     """Derive the execution plan for (arch, input shape, hardware).
 
     ``arrival_rate_per_s`` / ``avg_prompt_len`` / ``max_new`` describe
     the serving traffic mix (decode shapes only): they bound the
     megastep K by admission latency and pick the admission mode
     (chunked vs stall prefill) via ``scheduler.simulate_admission``.
+
+    ``kernel_backend`` prices the plan against the fused in-register
+    dequant kernels (``"pallas"``, default) or the materialized-unpack
+    XLA fallback (``"xla"``). The analytic precision/KV sweeps run
+    under the same backend, so the plan *predicts* the q4-vs-q8
+    ordering flip the fused kernels cause: on TPU-class bandwidth an
+    "xla" plan picks q8_0 (the q4 unpack tax drowns the byte win)
+    while the "pallas" plan picks q4_0.
     """
+    if kernel_backend not in ("pallas", "xla"):
+        raise ValueError(f"kernel_backend must be 'pallas' or 'xla', "
+                         f"got {kernel_backend!r}")
     tokens = shape.global_batch * (1 if shape.kind == "decode"
                                    else shape.seq_len)
     ridge = hw.ridge_flops_per_byte
@@ -135,7 +161,9 @@ def plan(cfg: ModelConfig, shape: InputShape,
             # (a floor above 8.5 bits rules out both k-quants → bf16)
             precision = ("q4_0" if quality_floor_bits <= 4.5 else
                          "q8_0" if quality_floor_bits <= 8.5 else "bf16")
-            use_pallas = precision != "bf16"  # in-kernel (VMEM) dequant
+            # in-kernel (VMEM) dequant — only on the fused backend
+            use_pallas = (precision != "bf16"
+                          and kernel_backend == "pallas")
             reason = f"AI {ai:.0f} < ridge {ridge:.0f}: weight-bound GEMV"
         else:
             precision = "bf16"
@@ -189,7 +217,7 @@ def plan(cfg: ModelConfig, shape: InputShape,
             sweep = simulate_precision(
                 cfg, hw, kv_len=max(shape.seq_len, 1),
                 batch=max(shape.global_batch, 1), formats=allowed,
-                ks=(megastep_k,))
+                ks=(megastep_k,), kernel_backend=kernel_backend)
             best = max(allowed,
                        key=lambda f: sweep[f][megastep_k].tokens_per_s)
             quant_policy = "bf16" if best == "f16" else best
@@ -206,7 +234,7 @@ def plan(cfg: ModelConfig, shape: InputShape,
                 kv_sweep = simulate_kv_precision(
                     cfg, hw, batch=max(shape.global_batch, 1),
                     formats=allowed_kv, ks=(megastep_k,),
-                    kv_lens=(kvl,))
+                    kv_lens=(kvl,), kernel_backend=kernel_backend)
                 kv_quant = max(
                     allowed_kv,
                     key=lambda f:
@@ -217,7 +245,7 @@ def plan(cfg: ModelConfig, shape: InputShape,
         fuse_gate_up=cfg.glu, decisions=decisions,
         megastep_k=megastep_k, admission=admission,
         donate_carries=True, quant_policy=quant_policy,
-        kv_quant=kv_quant)
+        kv_quant=kv_quant, kernel_backend=kernel_backend)
 
 
 def choose_megastep_k(hw: cm.HardwareSpec, step_s: float, *,

@@ -17,6 +17,16 @@ class PrecisionFormat:
     group_size: int           # weights per scale group (0 → none)
     scale_bits: int           # bits per group scale
     dequant_flops_per_weight: float  # extra in-kernel work
+    # Extra HBM bytes per weight the *XLA* backend pays to materialize
+    # a bf16 view before the consuming matmul/attention (write + read
+    # of the unpacked value). The fused Pallas backend dequantizes
+    # in-register and pays 0. q8_0 converts lane-for-lane (XLA fuses
+    # the int8→bf16 widen into the dot read), q4_0 cannot — the
+    # nibble-unpack forces a materialized bf16 copy: 2 bytes written +
+    # 2 re-read. This is the measured PR-4 "dequant tax" that made
+    # q4_0 KV decode at 0.75-0.81x bf16 despite streaming 0.281x the
+    # bytes.
+    xla_unpack_bytes_per_weight: float = 0.0
 
     @property
     def bits_per_weight(self) -> float:
@@ -37,12 +47,32 @@ class PrecisionFormat:
         configuration from a bf16-calibrated one."""
         return self.bits_per_weight / 16.0
 
+    def effective_stream_ratio(self, kernel_backend: str = "pallas"
+                               ) -> float:
+        """Stream ratio as the chosen kernel backend actually pays it.
+
+        ``"pallas"`` (fused in-register dequant) streams the quantized
+        bytes and nothing else — the ideal :attr:`stream_ratio`.
+        ``"xla"`` additionally writes+reads any materialized unpack
+        bytes (:attr:`xla_unpack_bytes_per_weight`), which is why a
+        4.5-bit format can *lose* to bf16 under XLA while winning
+        under the fused kernel — the q4-vs-q8 ordering flip
+        ``dispatch.plan`` predicts."""
+        if kernel_backend not in ("pallas", "xla"):
+            raise ValueError(
+                f"kernel_backend must be 'pallas' or 'xla', got "
+                f"{kernel_backend!r}")
+        extra = (self.xla_unpack_bytes_per_weight / 2.0
+                 if kernel_backend == "xla" else 0.0)
+        return self.stream_ratio + extra
+
 
 F32 = PrecisionFormat("f32", 32, 0, 0, 0.0)
 F16 = PrecisionFormat("f16", 16, 0, 0, 0.0)
 BF16 = PrecisionFormat("bf16", 16, 0, 0, 0.0)
 Q8_0 = PrecisionFormat("q8_0", 8, 32, 16, 1.5)   # widen int8 + scale
-Q4_0 = PrecisionFormat("q4_0", 4, 32, 16, 4.0)   # mask/shift/sign-extend
+Q4_0 = PrecisionFormat("q4_0", 4, 32, 16, 4.0,   # mask/shift/sign-extend
+                       xla_unpack_bytes_per_weight=4.0)
 #   dequant cost: NEON q4 path is ~3-4 extra ops per weight (nibble
 #   mask, shift, sign-extend, scale) — this is why the CPU's Q4 win
 #   shrinks as models grow and the GPU retakes the lead at 7B (Fig 4e).

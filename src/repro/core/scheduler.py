@@ -19,6 +19,31 @@ from typing import Dict, List, Optional, Sequence, Tuple
 from repro.configs.base import ModelConfig
 from repro.core import cost_model as cm
 from repro.core.graph import Graph, Node, Op, build_decoder_graph
+from repro.core.precision import get_format
+
+
+def _xla_unpack_penalty_s(g: Graph, weight_format: str,
+                          hw: cm.HardwareSpec,
+                          kernel_backend: str) -> float:
+    """Per-dispatch seconds the XLA backend pays to materialize bf16
+    weight views (write + read of the unpack) before the consuming
+    matmuls. ``graph._mm`` bakes the *fused* dequant model into node
+    costs (weight bytes at quantized width, dequant flops in-node), so
+    the materialization tax must be charged here, outside the graph.
+    Zero for the fused ``"pallas"`` backend and for unquantized or
+    lane-convertible (q8_0) formats."""
+    fmt = get_format(weight_format)
+    # effective - ideal = xla_unpack_bytes/2 per weight (validates the
+    # backend name as a side effect)
+    extra_ratio = (fmt.effective_stream_ratio(kernel_backend)
+                   - fmt.stream_ratio)
+    if not extra_ratio:
+        return 0.0
+    weight_elems = sum(n.weight_bytes for n in g.nodes) \
+        / fmt.bytes_per_weight
+    # bf16 footprint x extra ratio == elems x xla_unpack_bytes_per_weight
+    return weight_elems * 2.0 * extra_ratio \
+        / (hw.mem_bw * hw.mem_efficiency)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -150,6 +175,7 @@ def simulate_megastep(cfg: ModelConfig,
                       ks: Sequence[int] = (1, 4, 8, 16),
                       donate_carries: bool = True,
                       prefill_share: float = 0.0,
+                      kernel_backend: str = "pallas",
                       ) -> Dict[int, VersionResult]:
     """Predict serving-loop tok/s as a function of megastep K.
 
@@ -165,11 +191,19 @@ def simulate_megastep(cfg: ModelConfig,
     prompt tokens instead of emitting decode tokens, so reported
     tok/s scales by ``1 - prefill_share`` (the riders themselves add
     no time — same scan, same shapes).
+
+    ``kernel_backend`` selects the dequant execution model for
+    quantized ``weight_format``s: the default ``"pallas"`` is the
+    fused in-register dequant the graph nodes already encode;
+    ``"xla"`` adds the materialized-unpack stream on top
+    (:func:`_xla_unpack_penalty_s`) — the PR-4 regime where q4_0
+    decoded *slower* than q8_0 despite streaming half the bytes.
     """
     hw = hw or cm.a17_cpu(threads)
     g = build_decoder_graph(cfg, seq=1, kv_len=kv_len, batch=batch,
                             weight_format=weight_format, fused=True)
-    per_tok = cm.graph_time_wave(g, hw, overlap_efficiency=0.92)
+    per_tok = cm.graph_time_wave(g, hw, overlap_efficiency=0.92) \
+        + _xla_unpack_penalty_s(g, weight_format, hw, kernel_backend)
     carry = cm.decode_carry_bytes(cfg, batch, kv_len)
     out = {}
     for k in ks:
@@ -194,6 +228,7 @@ def simulate_precision(cfg: ModelConfig,
                        formats: Sequence[str] = ("f16", "q8_0", "q4_0"),
                        ks: Sequence[int] = (1, 8),
                        donate_carries: bool = True,
+                       kernel_backend: str = "pallas",
                        ) -> Dict[str, Dict[int, VersionResult]]:
     """Serving throughput across weight precisions × megastep K — the
     analytic twin of ``benchmarks/serving_bench.py``'s precision sweep
@@ -207,12 +242,16 @@ def simulate_precision(cfg: ModelConfig,
     memory-bound decode the ordering must come out q4_0 > q8_0 > f16 —
     when a measured backend inverts it (e.g. XLA dequantizing in a
     separate pass instead of in-kernel), that gap is the actionable
-    delta, not noise.
+    delta, not noise. Pass ``kernel_backend="xla"`` to *predict* that
+    inversion instead of just observing it: the materialized-unpack
+    tax re-ranks q4_0 below q8_0 (and below f16 on bandwidth-rich
+    parts) exactly as the measured sweep does.
     """
     hw = hw or cm.a17_cpu(threads)
     return {fmt: simulate_megastep(
         cfg, hw, kv_len=kv_len, weight_format=fmt, batch=batch, ks=ks,
-        donate_carries=donate_carries) for fmt in formats}
+        donate_carries=donate_carries, kernel_backend=kernel_backend)
+        for fmt in formats}
 
 
 def simulate_kv_precision(cfg: ModelConfig,
@@ -224,6 +263,7 @@ def simulate_kv_precision(cfg: ModelConfig,
                           kv_lens: Sequence[int] = (64, 1024, 8192),
                           weight_format: str = "f16",
                           donate_carries: bool = True,
+                          kernel_backend: str = "pallas",
                           ) -> Dict[str, Dict[int, Dict[int,
                                                         VersionResult]]]:
     """Serving throughput across KV-cache precisions × megastep K ×
@@ -246,9 +286,16 @@ def simulate_kv_precision(cfg: ModelConfig,
     contract no-op there, and this simulator reflects that by not
     rescaling their cache stream.
 
+    ``kernel_backend`` selects the dequant execution model: the
+    default ``"pallas"`` reads the quantized cache in-register (the
+    fused ``decode_attention_quant`` kernel); ``"xla"`` charges the
+    materialized bf16 unpack (``dequantize_rows`` every megastep) on
+    the cache *read* stream via ``megastep_time``. The carry term
+    keeps the plain ``stream_ratio`` either way — storage crossing
+    the dispatch boundary is quantized regardless of who dequantizes.
+
     Returns ``{fmt: {kv_len: {k: VersionResult}}}``.
     """
-    from repro.core.precision import get_format
     hw = hw or cm.a17_cpu(threads)
     noop = cfg.arch_type in ("ssm", "hybrid")
     # the bf16-calibrated step depends only on kv_len, not the format
@@ -257,7 +304,9 @@ def simulate_kv_precision(cfg: ModelConfig,
         g = build_decoder_graph(cfg, seq=1, kv_len=kvl, batch=batch,
                                 weight_format=weight_format, fused=True)
         per_ctx[kvl] = (cm.graph_time_wave(g, hw,
-                                           overlap_efficiency=0.92),
+                                           overlap_efficiency=0.92)
+                        + _xla_unpack_penalty_s(g, weight_format, hw,
+                                                kernel_backend),
                         cm.decode_carry_bytes(cfg, batch, kvl),
                         len(g.nodes))
     out: Dict[str, Dict[int, Dict[int, VersionResult]]] = {}
@@ -273,7 +322,8 @@ def simulate_kv_precision(cfg: ModelConfig,
                 t = cm.megastep_time(
                     per_tok, hw, k, carry_bytes=cache * ratio,
                     donate_carries=donate_carries,
-                    cache_bytes=cache, kv_format=eff)
+                    cache_bytes=cache, kv_format=eff,
+                    kernel_backend=kernel_backend)
                 per_k[k] = VersionResult(
                     f"kv_{fmt}_ctx{kvl}_k{k}", t / k,
                     cm.tokens_per_second(t, 1) * k * batch,

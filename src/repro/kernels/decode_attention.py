@@ -47,9 +47,15 @@ def _decode_kernel(lens_ref, q_ref, k_ref, v_ref, o_ref,
 
     @pl.when(blk_visible)
     def _body():
-        q = q_ref[0, 0].astype(jnp.float32) * scale      # (G, D)
-        k = k_ref[0, 0].astype(jnp.float32)              # (bk, D)
-        v = v_ref[0, 0].astype(jnp.float32)
+        # Mirror the XLA oracle (ops._decode_attention_jnp): the scaled
+        # query and the probabilities round back to the input dtype,
+        # and the dots run on input-dtype operands with f32
+        # accumulation — so bf16 serving runs are token-identical
+        # across kernel backends (all no-ops for f32 inputs).
+        q = (q_ref[0, 0].astype(jnp.float32) * scale
+             ).astype(q_ref.dtype)                       # (G, D)
+        k = k_ref[0, 0].astype(q_ref.dtype)              # (bk, D)
+        v = v_ref[0, 0].astype(q_ref.dtype)
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                                 preferred_element_type=jnp.float32)
         kpos = j * bk + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
@@ -63,7 +69,7 @@ def _decode_kernel(lens_ref, q_ref, k_ref, v_ref, o_ref,
         alpha = jnp.exp(m_prev - m_new)
         l_ref[...] = l_ref[...] * alpha + jnp.sum(p, -1, keepdims=True)
         acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot(
-            p, v, preferred_element_type=jnp.float32)
+            p.astype(q_ref.dtype), v, preferred_element_type=jnp.float32)
         m_ref[...] = m_new
 
     @pl.when(j == kv_steps - 1)

@@ -9,9 +9,13 @@ by the quantization ratio — exactly the memory-roofline win the paper
 measures on the A17's DRAM bus.
 
 Tiling: grid (M/bm, N/bn, K/bk), K innermost so the f32 accumulator
-tile lives in VMEM scratch across the K loop. ``bk`` is a multiple of
-the quant group (32) and of the 128 MXU lane width; all tile dims are
-128-aligned for the systolic array.
+tile lives in VMEM scratch across the K loop. ``bk`` must be a multiple
+of the quant group (32). Lane alignment is *not* assumed here: the
+dispatch layer (``ops.matmul`` → ``_pick_lane_tile``) enforces that the
+lane dims bn/bk are 128-aligned or span their whole dimension, and the
+sublane dim bm is 8-aligned when M >= 8 (bm = M below that — Mosaic
+pads sublanes for small decode GEMVs); shapes with no such tiling fall
+back to the XLA dequant path instead of reaching this kernel.
 """
 from __future__ import annotations
 
@@ -54,12 +58,17 @@ def _qmm_kernel(x_ref, q_ref, s_ref, o_ref, acc_ref, *, fmt: str,
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    x = x_ref[...].astype(jnp.float32)
+    x = x_ref[...]
     if fmt == "q8_0":
         w = _dequant_block_q8(q_ref[...], s_ref[...], group)
     else:
         w = _dequant_block_q4(q_ref[...], s_ref[...], group)
-    acc_ref[...] += jax.lax.dot(x, w,
+    # Round the dequantized tile to the activation dtype and feed the
+    # MXU an activation-dtype x activation-dtype dot with f32
+    # accumulation — the exact op ops.matmul's XLA fallback runs on
+    # dequantize(w, out_dtype), so the backends are token-identical
+    # (not merely allclose) for bf16 serving.
+    acc_ref[...] += jax.lax.dot(x, w.astype(x.dtype),
                                 preferred_element_type=jnp.float32)
 
     @pl.when(pl.program_id(2) == k_steps - 1)
@@ -79,13 +88,24 @@ def quant_matmul(x: jax.Array, w: QuantizedTensor, *,
     """
     M, K = x.shape
     Kw, N = w.logical_shape[-2:]
-    assert K == Kw, (x.shape, w.logical_shape)
+    if K != Kw:
+        raise ValueError(
+            f"quant_matmul: reduction-dim mismatch — x has K={K} "
+            f"(shape {x.shape}) but weight has K={Kw} "
+            f"(logical shape {w.logical_shape})")
     group = w.group
     bm = min(bm, M)
     bn = min(bn, N)
     bk = min(bk, K)
-    assert K % bk == 0 and bk % group == 0, (K, bk, group)
-    assert M % bm == 0 and N % bn == 0, (M, N, bm, bn)
+    if K % bk or bk % group:
+        raise ValueError(
+            f"quant_matmul: bk={bk} must divide K={K} and be a multiple "
+            f"of the quant group {group} (x {x.shape}, w "
+            f"{w.logical_shape} {w.fmt})")
+    if M % bm or N % bn:
+        raise ValueError(
+            f"quant_matmul: tiles bm={bm}, bn={bn} must divide "
+            f"M={M}, N={N} (x {x.shape}, w {w.logical_shape} {w.fmt})")
     k_steps = K // bk
     packed = w.fmt == "q4_0"
     kdiv = 2 if packed else 1

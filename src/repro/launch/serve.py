@@ -31,6 +31,11 @@ def main() -> None:
                     help="KV-cache precision: groupwise int8 payload + "
                          "scale leaves per cached position (no-op for "
                          "ssm/hybrid state)")
+    ap.add_argument("--kernels", default="",
+                    choices=["", "xla", "pallas"],
+                    help="kernel backend for quantized decode GEMVs + "
+                         "quantized-cache attention reads (default: "
+                         "derive from the config's use_pallas)")
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=16)
@@ -68,7 +73,8 @@ def main() -> None:
                            megastep_k=args.megastep_k,
                            admission=args.admission,
                            prefill_chunk=args.prefill_chunk,
-                           donate_carries=not args.no_donate)
+                           donate_carries=not args.no_donate,
+                           kernels=args.kernels or None)
     rng = np.random.default_rng(0)
     reqs = [Request(uid=i,
                     prompt=rng.integers(
@@ -85,7 +91,7 @@ def main() -> None:
              if engine.admission == "chunked" else
              f"{engine.stats.prefill_batches} prefill batches")
     print(f"arch={cfg.name} precision={args.precision} "
-          f"kv_quant={engine.kv_quant} "
+          f"kv_quant={engine.kv_quant} kernels={engine.kernels} "
           f"admission={engine.admission}: "
           f"{engine.stats.tokens_generated} tokens / {dt:.1f}s = "
           f"{engine.stats.tokens_generated / dt:.1f} tok/s "

@@ -253,11 +253,22 @@ def attention_decode(p, cfg: ModelConfig, x: jax.Array, cache: Dict, *,
     new_cache.update(kv_cache_write(cache, k, v, slot,
                                     kv_quant=kv_quant,
                                     group=cfg.quant_group))
-    k_read, v_read = kv_cache_read(new_cache, kv_quant=kv_quant)
     kv_len = jnp.minimum(lens + 1, S_cache)
     q = constrain(q, ("batch", "heads", None))
-    out = ops.decode_attention(q, k_read, v_read, kv_len=kv_len,
-                               use_pallas=cfg.use_pallas)
+    if kv_quant in ("q8_0", "q4_0"):
+        # Fused-dequant path: hand the raw int8 payload + scale leaves
+        # to the kernel layer. Under kernels="pallas" the dequant runs
+        # in-register inside the block loop (no per-token full-cache
+        # unpack); the XLA fallback inside decode_attention_quant is
+        # computation-identical to the old kv_cache_read route.
+        out = ops.decode_attention_quant(
+            q, new_cache["k"], new_cache["k_scale"],
+            new_cache["v"], new_cache["v_scale"], kv_len=kv_len,
+            fmt=kv_quant, use_pallas=cfg.use_pallas)
+    else:
+        k_read, v_read = kv_cache_read(new_cache, kv_quant=kv_quant)
+        out = ops.decode_attention(q, k_read, v_read, kv_len=kv_len,
+                                   use_pallas=cfg.use_pallas)
     out = out.reshape(B, 1, H * hd)
     out = layers.linear(p["wo"], out, use_pallas=cfg.use_pallas)
     return out, new_cache
@@ -299,10 +310,12 @@ def kv_cache_read(cache: Dict, *, kv_quant: str = "bf16",
     """The attention-visible (B, Hkv, S, hd) K/V view of a cache.
 
     bf16 caches return their leaves as-is; quantized caches dequantize
-    payload × scales at the read point. Like the XLA weight-dequant
-    path, this materializes a bf16 view per step — the bytes win is in
-    storage and the carry crossing the dispatch boundary; in-VMEM
-    dequant is the Pallas follow-up."""
+    payload × scales at the read point, materializing a bf16 view.
+    The decode hot path no longer uses this for quantized caches —
+    ``attention_decode`` hands the raw leaves to
+    ``ops.decode_attention_quant`` (in-VMEM dequant under
+    kernels="pallas"); this helper remains for tests and offline
+    inspection of cache contents."""
     if kv_quant in ("bf16", "f16", "f32"):
         return cache["k"], cache["v"]
     return (dequantize_rows(cache["k"], cache["k_scale"], kv_quant, dtype),

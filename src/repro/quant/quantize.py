@@ -262,11 +262,17 @@ def dequantize_rows(payload: jax.Array, scales: jax.Array, fmt: str,
 
 def quantize_tree(params, fmt: str, group: int = 32,
                   predicate=None):
-    """Quantize every >=2-D weight in a param pytree.
+    """Quantize every matmul weight in a param pytree.
 
-    ``predicate(path, leaf) -> bool`` limits which leaves quantize
-    (default: everything with ndim >= 2 and K % group == 0 — i.e. skip
-    norms, biases, conv kernels and embeddings stay quantizable).
+    Default selection: leaves with ndim >= 2 and K (axis -2) divisible
+    by ``group``, *excluding* any path containing ``norm`` or ``embed``.
+    Norm scales/biases are sub-2-D or precision-critical; embedding
+    tables (and the tied ``lm_head`` when it shares the ``embed`` path)
+    are read row-wise by gather, not streamed through ``quant_matmul``'s
+    K-major tiling, so they stay bf16. Pass ``predicate(path, leaf) ->
+    bool`` to additionally restrict the selection (it cannot re-enable
+    a skipped path; tests/test_quant.py pins exactly which leaves of a
+    dense model quantize).
     """
     if fmt in ("bf16", "f16", "f32"):
         return params

@@ -156,7 +156,22 @@ class ServingEngine:
                  prefill_chunk: Optional[int] = None,
                  donate_carries: bool = True,
                  quant_policy: Optional[str] = None,
-                 kv_quant: Optional[str] = None):
+                 kv_quant: Optional[str] = None,
+                 kernels: Optional[str] = None):
+        # Kernel backend is a serving dimension like kv_quant: one
+        # switch lights up the whole fused-dequant Pallas path (the
+        # quant_matmul decode GEMVs *and* the quantized-KV decode
+        # attention kernel) or pins everything to XLA. As with
+        # kv_quant, a request that differs from the model's config
+        # rebinds the engine to a same-params Model view.
+        if kernels is not None:
+            if kernels not in ("xla", "pallas"):
+                raise ValueError(
+                    f"kernels must be 'xla' or 'pallas' (got {kernels!r})")
+            if kernels != model.cfg.kernels:
+                model = Model(dataclasses.replace(model.cfg,
+                                                  kernels=kernels))
+        self.kernels = model.cfg.kernels
         # Cache precision is a serving dimension parallel to
         # ``quant_policy`` (the *other* memory-bound decode stream — and
         # the one that grows with context length and batch). The model's

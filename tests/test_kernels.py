@@ -297,3 +297,172 @@ def test_bf16_ring_write_read_unchanged():
     assert k_read is cache["k"] and v_read is cache["v"]
     np.testing.assert_array_equal(np.asarray(k_read[:, :, 0], np.float32),
                                   np.asarray(row, np.float32))
+
+
+# ---------------------------------------------------------------------------
+# decode attention over quantized cache leaves (fused dequant kernel)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("case", [
+    # B, Hq, Hkv, S, D, win, group
+    (2, 8, 2, 128, 64, 0, 32),    # full cache, GQA
+    (2, 4, 2, 128, 24, 0, 8),     # non-group-aligned head dim
+    (1, 8, 1, 256, 64, 64, 32),   # sliding window
+    (3, 4, 4, 64, 32, 32, 16),    # MHA, window = ring size
+])
+@pytest.mark.parametrize("fmt", ["q8_0", "q4_0"])
+def test_decode_attention_quant_parity(case, fmt):
+    """Fused-dequant kernel == dequantize_rows + the XLA decode oracle,
+    on the same quantized leaves — incl. part-filled and empty
+    (kv_len=0) rows, sliding windows and non-group-aligned head dims."""
+    from repro.kernels import ops
+    from repro.kernels.decode_attention_quant import decode_attention_quant
+    from repro.quant import quantize_rows
+    B, Hq, Hkv, S, D, win, group = case
+    ks = jax.random.split(jax.random.PRNGKey(13), 3)
+    q = jax.random.normal(ks[0], (B, Hq, D), jnp.float32)
+    kf = jax.random.normal(ks[1], (B, Hkv, S, D)).astype(jnp.bfloat16)
+    vf = jax.random.normal(ks[2], (B, Hkv, S, D)).astype(jnp.bfloat16)
+    kq, ksc = quantize_rows(kf, fmt, group)
+    vq, vsc = quantize_rows(vf, fmt, group)
+    lens = jnp.asarray(([0, S // 2, S] + [S // 4] * B)[:B], jnp.int32)
+    out = decode_attention_quant(q, kq, ksc, vq, vsc, lens, fmt=fmt,
+                                 window=win, bk=64, interpret=True)
+    want = ops.decode_attention_quant(q, kq, ksc, vq, vsc, lens,
+                                      fmt=fmt, window=win,
+                                      use_pallas=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=5e-5)
+
+
+def test_decode_attention_quant_kv_len_zero_rows():
+    """A fully-empty row decodes to zeros on both paths (the l==0
+    guard), while a neighbouring full row is unaffected."""
+    from repro.kernels import ops
+    from repro.quant import quantize_rows
+    B, Hq, Hkv, S, D = 2, 4, 2, 128, 32
+    ks = jax.random.split(jax.random.PRNGKey(17), 3)
+    q = jax.random.normal(ks[0], (B, Hq, D), jnp.float32)
+    kf = jax.random.normal(ks[1], (B, Hkv, S, D)).astype(jnp.bfloat16)
+    vf = jax.random.normal(ks[2], (B, Hkv, S, D)).astype(jnp.bfloat16)
+    kq, ksc = quantize_rows(kf, "q8_0", 32)
+    vq, vsc = quantize_rows(vf, "q8_0", 32)
+    lens = jnp.asarray([0, S], jnp.int32)
+    out = ops.decode_attention_quant(q, kq, ksc, vq, vsc, lens,
+                                     fmt="q8_0", use_pallas=True)
+    want = ops.decode_attention_quant(q, kq, ksc, vq, vsc, lens,
+                                      fmt="q8_0", use_pallas=False)
+    np.testing.assert_array_equal(np.asarray(out[0]),
+                                  np.zeros((Hq, D), np.float32))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=5e-5)
+
+
+def test_decode_attention_quant_ring_wraparound_cache():
+    """Quantized sliding-window ring cache: leaves written through
+    kv_cache_write (wrapping the ring twice) read identically through
+    the fused kernel and the dequantize_rows + oracle path."""
+    from repro.kernels import ops
+    from repro.models import attention as attn
+    from repro.configs.base import ModelConfig
+    window, hd, Hkv, B = 8, 32, 2, 2
+    cfg = ModelConfig(name="ringq", d_model=hd * Hkv, num_heads=Hkv * 2,
+                      num_kv_heads=Hkv, head_dim=hd, quant_group=32)
+    cache = attn.init_kv_cache(cfg, B, max_len=64, window=window,
+                               kv_quant="q4_0")
+    n_writes = 2 * window + 3
+    rows = jax.random.normal(jax.random.PRNGKey(23),
+                             (n_writes, B, Hkv, hd), jnp.bfloat16)
+    for i in range(n_writes):
+        slot = jnp.full((B,), i % window, jnp.int32)
+        cache = dict(cache, **attn.kv_cache_write(
+            cache, rows[i], rows[i], slot, kv_quant="q4_0",
+            group=cfg.quant_group))
+    q = jax.random.normal(jax.random.PRNGKey(29),
+                          (B, cfg.num_heads, hd), jnp.float32)
+    lens = jnp.full((B,), window, jnp.int32)  # ring full: all slots valid
+    args = (q, cache["k"], cache["k_scale"], cache["v"],
+            cache["v_scale"], lens)
+    out = ops.decode_attention_quant(*args, fmt="q4_0", use_pallas=True)
+    want = ops.decode_attention_quant(*args, fmt="q4_0",
+                                      use_pallas=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=5e-5)
+
+
+def test_decode_attention_quant_rejects_bad_inputs():
+    from repro.kernels.decode_attention_quant import decode_attention_quant
+    q = jnp.zeros((1, 4, 32))
+    kq = jnp.zeros((1, 1, 64, 32), jnp.int8)
+    sc = jnp.zeros((1, 1, 64, 1), jnp.bfloat16)
+    with pytest.raises(ValueError, match="fmt"):
+        decode_attention_quant(q, kq, sc, kq, sc, 8, fmt="bf16")
+    with pytest.raises(ValueError, match="payload"):
+        # q4_0 payload should be D//2 = 16 wide, not 32
+        decode_attention_quant(q, kq, sc, kq, sc, 8, fmt="q4_0")
+
+
+# ---------------------------------------------------------------------------
+# tile dispatch (_pick_tile / _pick_lane_tile) and env parsing
+# ---------------------------------------------------------------------------
+
+def test_pick_tile_lane_alignment():
+    """Lane (minor) dims must tile 128-aligned or span the whole dim;
+    the old picker handed Mosaic degenerate tiles (bn=29 for 493) that
+    only worked in interpret mode."""
+    from repro.kernels.ops import _pick_lane_tile, _pick_tile
+    assert _pick_tile(512, 256) == 256
+    assert _pick_tile(493, 128) == 29          # generic divisor picker
+    assert _pick_lane_tile(493, 128) is None   # ...lane guard rejects it
+    assert _pick_lane_tile(256, 128) == 128
+    assert _pick_lane_tile(64, 128) == 64      # full-span, sublane-ok
+    assert _pick_lane_tile(24, 128, multiple=8) == 24
+    assert _pick_lane_tile(12, 128) is None    # not 8-aligned
+    assert _pick_lane_tile(384, 128) == 128
+    # group multiple must survive the lane constraint
+    assert _pick_lane_tile(256, 256, multiple=32) == 256
+    assert _pick_lane_tile(96, 128, multiple=32) == 96
+
+
+@pytest.mark.parametrize("mkn", [(1, 64, 64),      # decode GEMV, bm=M=1
+                                 (12, 64, 64),     # sublane-padded bm
+                                 (2, 64, 93),      # prime-ish N -> XLA
+                                 (3, 36, 64)])     # misaligned K -> XLA
+@pytest.mark.parametrize("quant", [quantize_q8_0, quantize_q4_0])
+def test_matmul_dispatch_misaligned_shapes(mkn, quant):
+    """ops.matmul must stay correct whichever side of the tile-dispatch
+    guard a shape lands on (fused kernel or XLA fallback)."""
+    from repro.kernels import ops
+    M, K, N = mkn
+    k1, k2 = jax.random.split(jax.random.PRNGKey(31))
+    x = jax.random.normal(k1, (M, K), jnp.float32)
+    wf = jax.random.normal(k2, (K, N), jnp.float32)
+    if K % 32:
+        w = quant(wf, group=K)   # degenerate group for tiny K
+    else:
+        w = quant(wf)
+    out = ops.matmul(x, w, use_pallas=True, out_dtype=jnp.float32)
+    want = ref.quant_matmul_ref(x, w, out_dtype=jnp.float32)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("val,expected", [
+    ("1", True), ("true", True), ("TRUE", True), ("yes", True),
+    ("0", False), ("false", False), ("False", False), ("FALSE", False),
+    ("no", False), ("off", False), ("OFF", False), (" 0 ", False),
+    ("", False),
+])
+def test_interpret_default_env_parsing(val, expected, monkeypatch):
+    """REPRO_PALLAS_INTERPRET=False/FALSE/no/off must disable interpret
+    mode (the old truthiness check treated any non-empty string as
+    enabled)."""
+    from repro.kernels import ops
+    monkeypatch.setenv("REPRO_PALLAS_INTERPRET", val)
+    assert ops._interpret_default() is expected
+
+
+def test_interpret_default_unset_follows_backend(monkeypatch):
+    from repro.kernels import ops
+    monkeypatch.delenv("REPRO_PALLAS_INTERPRET", raising=False)
+    assert ops._interpret_default() is (jax.default_backend() != "tpu")

@@ -209,3 +209,65 @@ def test_quantized_tensor_checkpoint_roundtrip(tmp_path):
                                   np.asarray(qt.data))
     np.testing.assert_array_equal(np.asarray(back.scales, np.float32),
                                   np.asarray(qt.scales, np.float32))
+
+
+def test_quantize_tree_leaf_pin_dense_model():
+    """Pin exactly which leaves of a dense model quantize (the contract
+    quantize_tree's docstring promises): matmul weights with ndim >= 2
+    and group-aligned K do; anything on a ``norm`` or ``embed`` path —
+    including the gather-read embedding table — stays a plain array,
+    and a predicate can only restrict the selection, never re-enable a
+    skipped path."""
+    from repro.configs import get_config, reduced
+    from repro.models import Model
+    from repro.quant.quantize import QuantizedTensor
+    cfg = reduced(get_config("deepseek-7b"), d_model=64, d_ff=128,
+                  vocab_size=256, num_heads=2, num_kv_heads=1)
+    params = Model(cfg).init(jax.random.PRNGKey(0))
+    qt = quantize_tree(params, "q8_0", cfg.quant_group)
+    flat = {jax.tree_util.keystr(p): l
+            for p, l in jax.tree_util.tree_flatten_with_path(
+                qt, is_leaf=lambda x: isinstance(x, QuantizedTensor))[0]}
+    quantized = {p for p, l in flat.items()
+                 if isinstance(l, QuantizedTensor)}
+    plain = set(flat) - quantized
+    for p in quantized:
+        assert "embed" not in p and "norm" not in p, p
+        assert flat[p].logical_shape[-2] % cfg.quant_group == 0, p
+    for p in plain:
+        leaf = flat[p]
+        assert ("embed" in p or "norm" in p or leaf.ndim < 2
+                or leaf.shape[-2] % cfg.quant_group != 0), p
+    assert any("embed" in p for p in plain)       # table stayed bf16
+    assert quantized                              # ...but GEMMs moved
+    # predicate restricts but cannot re-enable embed/norm paths
+    qt2 = quantize_tree(params, "q8_0", cfg.quant_group,
+                        predicate=lambda path, leaf: True)
+    flat2 = {jax.tree_util.keystr(p): l
+             for p, l in jax.tree_util.tree_flatten_with_path(
+                 qt2, is_leaf=lambda x: isinstance(x, QuantizedTensor)
+             )[0]}
+    assert {p for p, l in flat2.items()
+            if isinstance(l, QuantizedTensor)} == quantized
+    qt3 = quantize_tree(params, "q8_0", cfg.quant_group,
+                        predicate=lambda path, leaf: False)
+    assert not any(isinstance(l, QuantizedTensor)
+                   for l in jax.tree_util.tree_leaves(
+                       qt3, is_leaf=lambda x: isinstance(
+                           x, QuantizedTensor)))
+
+
+def test_quant_matmul_shape_errors_are_informative():
+    """The kernel's guard rails raise ValueError with the offending
+    shapes instead of bare asserts (debuggability when dispatch hands
+    it a bad tile)."""
+    from repro.kernels.quant_matmul import quant_matmul
+    x = jnp.ones((4, 64), jnp.float32)
+    w = quantize_q8_0(jnp.ones((64, 32)))
+    bad_x = jnp.ones((4, 32), jnp.float32)
+    with pytest.raises(ValueError, match=r"64.*|32.*"):
+        quant_matmul(bad_x, w, bm=4, bn=32, bk=32, interpret=True)
+    with pytest.raises(ValueError, match="group"):
+        quant_matmul(x, w, bm=4, bn=32, bk=16, interpret=True)
+    with pytest.raises(ValueError, match="divide"):
+        quant_matmul(x, w, bm=3, bn=32, bk=64, interpret=True)

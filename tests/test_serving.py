@@ -457,3 +457,49 @@ def test_plan_and_simulator_carry_kv_quant():
                                  kv_lens=(4096,), ks=(8,))
     assert simr["q4_0"][4096][8].tokens_per_s == \
         simr["bf16"][4096][8].tokens_per_s
+
+
+def test_plan_kernel_backend_flips_quant_ordering():
+    """The planner's kernel_backend knob predicts the fused-dequant
+    flip this PR's kernels cause: priced against the XLA backend the
+    materialized q4_0 unpack (write + read of a bf16 view) drowns the
+    byte win and both weight and cache precision fall back to q8_0;
+    priced against the fused Pallas kernels (in-register dequant,
+    quantized-width HBM reads) q4_0 wins both. config_overrides emits
+    a consistent (kernels, use_pallas) pair either way."""
+    from repro.core import TPU_V5E, plan, simulate_kv_precision
+    from repro.core.precision import get_format
+    from repro.configs.base import INPUT_SHAPES
+    cfg = get_config("deepseek-7b")
+    shape = INPUT_SHAPES["decode_32k"]
+    p_pal = plan(cfg, shape, TPU_V5E, avg_prompt_len=32)  # default
+    p_xla = plan(cfg, shape, TPU_V5E, avg_prompt_len=32,
+                 kernel_backend="xla")
+    assert p_pal.kernel_backend == "pallas"
+    assert (p_pal.quant_policy, p_pal.kv_quant) == ("q4_0", "q4_0")
+    assert (p_xla.quant_policy, p_xla.kv_quant) == ("q8_0", "q8_0")
+    assert "kernels=" in p_pal.summary()
+    over_p, over_x = p_pal.config_overrides(), p_xla.config_overrides()
+    assert over_p["kernels"] == "pallas" and over_p["use_pallas"]
+    assert over_x["kernels"] == "xla" and not over_x["use_pallas"]
+    with pytest.raises(ValueError):
+        plan(cfg, shape, TPU_V5E, kernel_backend="mosaic")
+
+    # the flip's mechanism, pinned at the format level: only q4_0
+    # carries a materialized-unpack tax, so only its effective stream
+    # ratio degrades under XLA (q8_0's int8 widen fuses into the dot)
+    q4, q8 = get_format("q4_0"), get_format("q8_0")
+    assert q4.effective_stream_ratio("pallas") == q4.stream_ratio
+    assert q4.effective_stream_ratio("xla") > 1.0   # worse than bf16
+    assert q8.effective_stream_ratio("xla") == q8.stream_ratio
+
+    # and at the simulator level: per-backend q4-vs-q8 ordering at the
+    # plan's context on the same hardware
+    sim_p = simulate_kv_precision(cfg, TPU_V5E, kv_lens=(32768,),
+                                  ks=(8,))
+    sim_x = simulate_kv_precision(cfg, TPU_V5E, kv_lens=(32768,),
+                                  ks=(8,), kernel_backend="xla")
+    assert sim_p["q4_0"][32768][8].tokens_per_s > \
+        sim_p["q8_0"][32768][8].tokens_per_s
+    assert sim_x["q8_0"][32768][8].tokens_per_s > \
+        sim_x["q4_0"][32768][8].tokens_per_s

@@ -24,6 +24,8 @@ per (arch, slots, K, admission) combination.
 import dataclasses
 import os
 
+import pytest
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -64,13 +66,14 @@ def _model(arch, quant="bf16", kv="bf16"):
     return _MODELS[key]
 
 
-def _engine(arch, slots, k, mode, quant="bf16", kv="bf16") -> ServingEngine:
-    key = (arch, slots, k, mode, quant, kv)
+def _engine(arch, slots, k, mode, quant="bf16", kv="bf16",
+            kernels=None) -> ServingEngine:
+    key = (arch, slots, k, mode, quant, kv, kernels)
     if key not in _ENGINES:
         cfg, m, params = _model(arch, quant, kv)
         _ENGINES[key] = ServingEngine(
             m, params, slots=slots, max_len=64, megastep_k=k,
-            admission=mode, prefill_chunk=16)
+            admission=mode, prefill_chunk=16, kernels=kernels)
     eng = _ENGINES[key]
     eng.reset()
     return eng
@@ -164,6 +167,7 @@ def test_chunked_matches_reference_across_archs(seed, arch):
         assert r.output == ref, (arch, r.uid, r.output, ref)
 
 
+@pytest.mark.slow  # ~2 min: cross-arch x format x admission sweep
 @given(st.integers(0, 2 ** 31 - 1), st.sampled_from(QUANTS))
 @settings(max_examples=3, deadline=None)
 def test_quantized_engine_matches_reference(seed, quant):
@@ -226,6 +230,7 @@ def test_quantized_megastep_k_invariance(seed, quant, k):
     assert outs[1] == outs[k], (quant, k)
 
 
+@pytest.mark.slow  # ~3 min: cache-family x format x admission x K sweep
 @given(st.integers(0, 2 ** 31 - 1), st.sampled_from(QUANTS),
        st.sampled_from([1, 4, 8]))
 @settings(max_examples=3, deadline=None)
@@ -308,6 +313,38 @@ def test_kv_quant_eos_retires_at_reference_position(seed, kv):
     eng.run()
     assert req.done
     assert req.output == ref[:idx + 1]
+
+
+@given(st.integers(0, 2 ** 31 - 1),
+       st.sampled_from(("bf16",) + QUANTS), st.sampled_from([1, 8]))
+@settings(max_examples=2, deadline=None)
+def test_pallas_engine_matches_reference(seed, quant, k):
+    """Cross-backend token identity (the fused-kernel contract this
+    PR's kernels were debugged against): a ``kernels="pallas"`` engine
+    — quant_matmul decode GEMVs + the quantized decode-attention
+    kernel, interpret mode on CPU — produces the same greedy tokens as
+    ``Model.reference_decode`` on the plain XLA model, for the same
+    params and cache format, across both admission modes and megastep
+    K ∈ {1, 8}. The cache format rides the weight format (quantized
+    weights + quantized cache is the fused kernel's target regime)."""
+    rng = np.random.default_rng(seed)
+    kv = "bf16" if quant == "bf16" else quant
+    cfg, m, params = _model("deepseek-7b", quant, kv)
+    for mode in ("chunked", "stall"):
+        reqs = _random_requests(cfg, rng, 2, max_prompt=8, max_new_hi=6)
+        eng = _engine("deepseek-7b", 2, k, mode, quant, kv,
+                      kernels="pallas")
+        assert eng.kernels == "pallas"
+        for r in reqs:
+            eng.submit(r)
+        eng.run()
+        for r in reqs:
+            assert r.done
+            ref = m.reference_decode(
+                params, r.prompt, r.max_new_tokens,
+                stepwise_prefill=(mode == "chunked"))
+            assert r.output == ref, (mode, quant, k, r.uid,
+                                     r.output, ref)
 
 
 @given(st.integers(0, 2 ** 31 - 1), st.floats(0.5, 2.0))

@@ -77,8 +77,10 @@ def test_dispatch_plan_configures_model():
     p = plan(cfg, INPUT_SHAPES["decode_32k"])
     over = p.config_overrides()
     assert over["fuse_qkv"] is True
+    # kernels wins over use_pallas in __post_init__, so pin both to
+    # keep this smoke test on the fast XLA path
     small = dataclasses.replace(
-        reduced(cfg), **{**over, "use_pallas": False})
+        reduced(cfg), **{**over, "use_pallas": False, "kernels": "xla"})
     m = Model(small)
     params = m.init(jax.random.PRNGKey(0))
     logits, _ = m.forward(params, {"tokens": jnp.zeros((2, 8), jnp.int32)})
