@@ -1,7 +1,7 @@
 """End-to-end serving benchmark: the ServingEngine decoding batched
 requests on a reduced model (live execution).
 
-Five sweeps (``--sweep megastep|mixed|precision|kv|kernels|all``):
+Six sweeps (``--sweep megastep|mixed|precision|kv|kernels|async|all``):
 
 1. **Megastep sweep** — ``K ∈ {1, 4, 8, 16}``, all requests queued
    upfront (stall admission, the PR-1 configuration): K=1 reproduces
@@ -42,6 +42,32 @@ Five sweeps (``--sweep megastep|mixed|precision|kv|kernels|all``):
    TPU-v5e planner flip (xla prices the materialized q4 unpack and
    picks q8_0; the fused pallas backend hands the win back to q4_0).
    Emitted as the JSON's ``kernel_backend`` section.
+
+6. **Async-overlap sweep** — ``pipeline_depth ∈ {1, 2, 4}`` on the
+   same engine (the knob is pure host orchestration; the compiled
+   megastep is shared) at **K=1**, the paper's per-token-dispatch
+   regime: with one decode token per dispatch the host's per-megastep
+   work — dispatch-call overhead, draining the packed ``(tokens,
+   emitted, pos)`` block, staging the next admission — is comparable
+   to the device step, so hiding it behind in-flight megasteps is
+   exactly the §5 launch-overhead story attacked from the other side
+   (pipelining instead of amortization). The measured gap is
+   ``(decode_wall - drain_wait) / megasteps``: host-side work that
+   extends the serving period beyond the device wait. It shrinks at
+   depth > 1 because part of the dispatch/drain runs while the device
+   executes the previous in-flight megastep. Two measured caveats are
+   recorded rather than hidden: (a) carry *donation* serializes the
+   dispatch chain on this backend (donating a buffer that is itself a
+   pending computation's output blocks the call until it
+   materializes), so the sweep runs ``donate_carries=False`` — the
+   donation-vs-overlap tradeoff is real and the section says so; (b)
+   at K >= 2 the device step dwarfs the host gap and the stale slot
+   view's wasted trailing substeps eat the overlap win — amortization
+   and pipelining attack the same gap, and once K has amortized it
+   there is nothing left to hide. Greedy token-identity across depths
+   is asserted (pipelining must move time, never tokens), and
+   ``simulate_async_overlap`` provides the analytic prediction.
+   Emitted as the JSON's ``async_overlap`` section.
 
 Emits ``BENCH_serving.json`` at the repo root (tok/s per K, the K8/K1
 speedup, the chunked/stall mixed-workload ratio, the precision table +
@@ -115,6 +141,25 @@ KB_MAX_NEW = 32
 KB_MAX_LEN = 128
 KB_PROMPT_RANGE = (24, 41)
 KB_REPS = 2
+
+# async-overlap sweep: serial vs pipelined dispatch/drain loop at the
+# paper's K=1 per-token-dispatch operating point (at larger K the
+# megastep has already amortized the host gap this sweep hides — see
+# the module docstring). Chunked admission (the pipelined loop's
+# steady state: admissions staged during megastep N ride into N+1's
+# slot view); donation off because chained-carry donation serializes
+# dispatch on this backend. One engine serves every depth — the knob
+# is host-side orchestration over the same compiled executable — so
+# the comparison can't be confounded by separate jit caches. Sized so
+# the timed decode region stays ≥0.15 s (PR-3 methodology note).
+# 16 long-generation requests = 4 retirement waves on 4 slots: the
+# stale-view tax (a retiring slot idles up to depth-1 extra substeps
+# before the host sees it) stays small next to the steady-state loop
+ASYNC_DEPTHS = (1, 2, 4)
+ASYNC_REQUESTS = 16
+ASYNC_MAX_NEW = 96
+ASYNC_K = 1
+ASYNC_REPS = 5
 
 # mixed workload: admission-heavy traffic (short prompts, short
 # generations, ~2 arrivals per megastep → every megastep boundary has
@@ -624,7 +669,130 @@ def _sweep_mixed(cfg, model, params, out, rows) -> None:
         f"token-identical: {mix_equiv}"))
 
 
-_SWEEPS = ("megastep", "mixed", "precision", "kv", "kernels")
+def _async_pass(engine) -> Dict:
+    """One pass over the standard workload with per-pass deltas of the
+    pipelining attribution stats."""
+    reqs = _requests(ASYNC_REQUESTS, ASYNC_MAX_NEW)
+    for r in reqs:
+        engine.submit(r)
+    st = engine.stats
+    base = (st.decode_wall_s, st.drain_wait_s, st.megasteps,
+            st.tokens_generated, st.prefills)
+    engine.run()
+    tokens = st.tokens_generated - base[3]
+    return {
+        "decode_wall_s": st.decode_wall_s - base[0],
+        "drain_wait_s": st.drain_wait_s - base[1],
+        "megasteps": st.megasteps - base[2],
+        "dec_tokens": tokens - (st.prefills - base[4]),
+        "outputs": [r.output for r in reqs],
+    }
+
+
+def _sweep_async(cfg, model, params, out, rows) -> None:
+    """pipeline_depth {1, 2, 4} through one K=1 engine: decode tok/s,
+    the per-megastep host dispatch/drain gap and its shrinkage, greedy
+    token identity across depths."""
+    # This sweep builds its own model, bigger than the shared 2L/d64
+    # one: pipelining hides host work *behind the device step*, so the
+    # device step must be comparable to the ~0.5-1ms host gap for
+    # there to be anything to hide (on the shared model the device is
+    # ~15us/megastep at K=1 — the measurable ceiling is ~2%). d256 at
+    # 2 layers puts the K=1 device step at ~1ms, the balanced point;
+    # much bigger (4L/ff1024) and the host blocks on deep in-flight
+    # work instead, which this backend's partial background chaining
+    # turns into a regression.
+    cfg = reduced(get_config("deepseek-7b"), d_model=256, d_ff=512,
+                  vocab_size=512, num_heads=4, num_kv_heads=2,
+                  unroll_scans=True)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = ServingEngine(model, params, slots=SLOTS, max_len=128,
+                        sampling=SamplingConfig(),  # greedy
+                        megastep_k=ASYNC_K, admission="chunked",
+                        megastep_unroll=True, donate_carries=False)
+    _async_pass(eng)                     # untimed pass pays compilation
+    eng.reset()
+    best = {d: None for d in ASYNC_DEPTHS}
+    outputs = {}
+    for _ in range(ASYNC_REPS):          # interleave reps across depths
+        for d in ASYNC_DEPTHS:           # so load hits all alike
+            eng.pipeline_depth = d
+            res = _async_pass(eng)
+            outputs[d] = res.pop("outputs")
+            if best[d] is None or \
+                    res["decode_wall_s"] < best[d]["decode_wall_s"]:
+                best[d] = res
+            eng.reset()
+
+    # pipelining must move *time*, never tokens: greedy streams are
+    # identical across depths (the property suite pins this across all
+    # cache families; the bench asserts it on its own workload too)
+    equiv = all(outputs[d] == outputs[ASYNC_DEPTHS[0]]
+                for d in ASYNC_DEPTHS)
+    assert equiv, "pipelined engine diverged from serial greedy tokens"
+
+    depths: Dict[str, Dict] = {}
+    for d in ASYNC_DEPTHS:
+        b = best[d]
+        m = max(b["megasteps"], 1)
+        # the host gap: per-megastep host work (dispatch call, drain
+        # python, admission staging) NOT spent blocked on the device —
+        # the serial-loop overhead pipelining exists to hide. The
+        # blocked share (drain_wait) may grow as depth rises: the host
+        # runs ahead and waits on deeper in-flight work instead.
+        gap_us = (b["decode_wall_s"] - b["drain_wait_s"]) / m * 1e6
+        depths[f"depth{d}"] = {
+            "decode_tok_s": round(b["dec_tokens"] / b["decode_wall_s"], 1),
+            "decode_wall_s": round(b["decode_wall_s"], 4),
+            "megasteps": b["megasteps"],
+            "host_gap_us_per_megastep": round(gap_us, 1),
+            "drain_wait_us_per_megastep": round(
+                b["drain_wait_s"] / m * 1e6, 1),
+        }
+    d_hi = ASYNC_DEPTHS[-1]
+    gap1 = depths["depth1"]["host_gap_us_per_megastep"]
+    gap_hi = depths[f"depth{d_hi}"]["host_gap_us_per_megastep"]
+    ratio = depths[f"depth{d_hi}"]["decode_tok_s"] / \
+        depths["depth1"]["decode_tok_s"]
+
+    # analytic twin: the overlap model at the paper's 2-thread A17
+    # point, same K — predicted period per megastep per depth (the
+    # model saturates at depth 2: one in-flight megastep already hides
+    # the gap up to the device-step time)
+    from repro.core import a17_cpu, simulate_async_overlap
+    sim = simulate_async_overlap(cfg, a17_cpu(2), k=ASYNC_K,
+                                 depths=ASYNC_DEPTHS)
+    analytic = {f"depth{d}": {
+        "tok_s": round(sim[d].tokens_per_s, 1),
+        "detail": sim[d].detail} for d in ASYNC_DEPTHS}
+
+    out["async_overlap"] = {
+        "model": "deepseek-7b reduced (2L, d256, ff512, v512) — "
+                 "sized so the K=1 device step ~= the host gap",
+        "requests": ASYNC_REQUESTS, "max_new": ASYNC_MAX_NEW,
+        "megastep_k": ASYNC_K, "slots": SLOTS,
+        "sampling": "greedy", "admission": "chunked",
+        "donate_carries": False,
+        "note": "K=1 is the per-token-dispatch regime this sweep "
+                "pipelines; donation is off because chained-carry "
+                "donation serializes dispatch on this backend, and at "
+                "K>=2 megastep amortization has already hidden the "
+                "host gap (see benchmarks/serving_bench.py docstring)",
+        "depths": depths,
+        "host_gap_shrink": round(gap1 / max(gap_hi, 1e-9), 2),
+        f"depth{d_hi}_over_depth1_decode": round(ratio, 2),
+        "greedy_equiv_depths": equiv,
+        "analytic_a17_2t": analytic,
+    }
+    rows.append((
+        "serving/async_host_gap_depth%d" % d_hi, gap_hi,
+        f"host gap/megastep {gap1:.0f}us (depth1) -> {gap_hi:.0f}us "
+        f"(depth{d_hi}), {gap1 / max(gap_hi, 1e-9):.2f}x shrink; "
+        f"decode {ratio:.2f}x; greedy token-identical: {equiv}"))
+
+
+_SWEEPS = ("megastep", "mixed", "precision", "kv", "kernels", "async")
 
 
 def run(sweeps: Sequence[str] = _SWEEPS) -> List[Tuple[str, float, str]]:
@@ -645,6 +813,8 @@ def run(sweeps: Sequence[str] = _SWEEPS) -> List[Tuple[str, float, str]]:
         _sweep_kv(cfg, model, params, out, rows)
     if "kernels" in sweeps:
         _sweep_kernels(cfg, model, params, out, rows)
+    if "async" in sweeps:
+        _sweep_async(cfg, model, params, out, rows)
     path.write_text(json.dumps(out, indent=2) + "\n")
     rows.append(("serving/bench_json", 0.0,
                  f"wrote {path.name} sections: {', '.join(sweeps)}"))

@@ -4,8 +4,41 @@ requests through the continuous-batching engine at Q8/Q4 — the paper's
 precision sweep as a deployment decision.
 
   PYTHONPATH=src python examples/serve_batch.py --quant q4_0
+
+With ``--frontend`` the same stream runs through the asyncio actor
+front-end (``repro.launch.serve.AsyncServingFrontend``) instead of the
+blocking ``engine.run()`` — the deployment shape for interactive
+serving. The front-end API in one screen::
+
+    fe = AsyncServingFrontend(engine, max_pending=8)
+
+    # await the full greedy/sampled completion
+    toks = await fe.generate(prompt, max_new_tokens=24)
+
+    # stream tokens as megastep blocks drain; enforce a deadline —
+    # on expiry generate() raises DeadlineExceeded carrying the
+    # partial tokens, and the request's slot retires in the engine
+    # via the frozen-write cancel path
+    try:
+        toks = await fe.generate(prompt, max_new_tokens=24,
+                                 deadline_s=0.5,
+                                 on_token=lambda t: print(t, end=" "),
+                                 temperature=0.7, top_k=40)
+    except DeadlineExceeded as e:
+        partial = e.tokens
+
+    await fe.close()        # drain staged work, stop the serve loop
+
+One coroutine owns the engine, so ``generate`` is safe to call from
+any number of concurrent tasks; ``max_pending`` bounds how many
+admitted-but-unfinished requests exist at once (further ``generate``
+calls suspend — backpressure, not an error). Cancelling the awaiting
+task (``task.cancel()``) cancels the request in the engine too.
+
+  PYTHONPATH=src python examples/serve_batch.py --frontend --deadline-s 2
 """
 import argparse
+import asyncio
 import time
 
 import jax
@@ -13,6 +46,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config, reduced
+from repro.launch.serve import AsyncServingFrontend, DeadlineExceeded
 from repro.models import Model
 from repro.serving import Request, SamplingConfig, ServingEngine
 import dataclasses
@@ -33,6 +67,12 @@ def main() -> None:
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--requests", type=int, default=12)
     ap.add_argument("--max-new", type=int, default=24)
+    ap.add_argument("--frontend", action="store_true",
+                    help="serve through the asyncio front-end "
+                         "(streaming callbacks, deadlines) instead of "
+                         "engine.run()")
+    ap.add_argument("--deadline-s", type=float, default=None,
+                    help="per-request deadline for --frontend")
     args = ap.parse_args()
 
     cfg = reduced(get_config("mistral-nemo-12b"), num_layers=4,
@@ -56,15 +96,44 @@ def main() -> None:
                            quant_policy=args.quant,
                            kv_quant=args.kv_quant)
     rng = np.random.default_rng(0)
-    reqs = [Request(uid=i,
-                    prompt=rng.integers(1, cfg.vocab_size,
-                                        size=5 + i % 4).astype(np.int32),
-                    max_new_tokens=args.max_new)
-            for i in range(args.requests)]
-    for r in reqs:
-        engine.submit(r)
+    prompts = [rng.integers(1, cfg.vocab_size,
+                            size=5 + i % 4).astype(np.int32)
+               for i in range(args.requests)]
 
     t0 = time.time()
+    if args.frontend:
+        async def drive():
+            fe = AsyncServingFrontend(engine,
+                                      max_pending=2 * args.slots)
+
+            async def one(p):
+                try:
+                    return await fe.generate(
+                        p, max_new_tokens=args.max_new,
+                        deadline_s=args.deadline_s,
+                        temperature=0.7, top_k=40)
+                except DeadlineExceeded as e:
+                    return e            # keep the partial tokens
+            outs = await asyncio.gather(*[one(p) for p in prompts])
+            await fe.close()
+            return outs
+
+        outs = asyncio.run(drive())
+        dt = time.time() - t0
+        expired = sum(isinstance(o, DeadlineExceeded) for o in outs)
+        first = next((o for o in outs
+                      if not isinstance(o, DeadlineExceeded)), [])
+        print(f"{len(outs) - expired}/{len(outs)} requests done, "
+              f"{expired} deadline-expired, "
+              f"{engine.stats.tokens_generated} tokens in {dt:.1f}s "
+              f"({engine.stats.tokens_generated / dt:.1f} tok/s)")
+        print("sample:", list(first)[:12])
+        return
+
+    reqs = [Request(uid=i, prompt=p, max_new_tokens=args.max_new)
+            for i, p in enumerate(prompts)]
+    for r in reqs:
+        engine.submit(r)
     engine.run()
     dt = time.time() - t0
     done = sum(r.done for r in reqs)

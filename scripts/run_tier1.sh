@@ -97,6 +97,62 @@ print(f"[tier1] kv-quant smoke OK: {len(reqs)} requests token-identical "
       f"to the quantized-cache reference")
 EOF
 
+echo "[tier1] async-serve front-end smoke (deadlines + cancellation)"
+python - <<'EOF'
+import asyncio
+import jax, numpy as np
+from repro.configs import get_config, reduced
+from repro.models import Model
+from repro.serving import Request, ServingEngine
+from repro.launch.serve import AsyncServingFrontend, DeadlineExceeded
+
+cfg = reduced(get_config("deepseek-7b"), d_model=64, d_ff=128,
+              vocab_size=256, num_heads=2, num_kv_heads=1)
+m = Model(cfg)
+params = m.init(jax.random.PRNGKey(0))
+eng = ServingEngine(m, params, slots=2, max_len=64, megastep_k=2,
+                    pipeline_depth=2)
+rng = np.random.default_rng(0)
+prompts = [rng.integers(1, cfg.vocab_size, size=5 + i).astype(np.int32)
+           for i in range(3)]
+
+async def drive():
+    fe = AsyncServingFrontend(eng, max_pending=4)
+    streamed = []
+    # one request with an impossible deadline: must raise
+    # DeadlineExceeded and retire its slot via engine.cancel
+    expired = 0
+    try:
+        await fe.generate(prompts[0], max_new_tokens=500,
+                          deadline_s=0.0)
+    except DeadlineExceeded:
+        expired += 1
+    # one explicit task cancellation mid-flight
+    victim = asyncio.ensure_future(
+        fe.generate(prompts[1], max_new_tokens=500))
+    await asyncio.sleep(0.05)
+    victim.cancel()
+    try:
+        await victim
+    except asyncio.CancelledError:
+        pass
+    # a normal request afterwards: streams and completes correctly
+    toks = await fe.generate(prompts[2], max_new_tokens=6,
+                             deadline_s=30.0,
+                             on_token=streamed.append)
+    await fe.close()
+    return expired, toks, streamed
+
+expired, toks, streamed = asyncio.run(drive())
+assert expired == 1, "deadline-expired request did not raise"
+assert eng.stats.cancelled >= 2, eng.stats.cancelled
+assert toks == streamed == m.reference_decode(params, prompts[2], 6)
+assert eng.in_flight == 0 and not eng.has_work()
+print(f"[tier1] async-serve smoke OK: 1 deadline expiry + 1 "
+      f"cancellation ({eng.stats.cancelled} engine cancels), "
+      f"survivor token-identical to reference")
+EOF
+
 echo "[tier1] BENCH_serving.json schema check"
 python - <<'EOF'
 import json, pathlib
@@ -145,6 +201,19 @@ for fmt in ("q8_0", "q4_0"):
 assert kb["analytic_tpu_v5e_decode_32k"]["xla"]["kv_quant"] == "q8_0"
 assert kb["analytic_tpu_v5e_decode_32k"]["pallas"]["kv_quant"] == "q4_0"
 assert kb["q4_flip_predicted"] is True
+ao = bench["async_overlap"]
+for key in ("depths", "host_gap_shrink", "greedy_equiv_depths",
+            "analytic_a17_2t"):
+    assert key in ao, f"async_overlap section missing key: {key}"
+for d in ("depth1", "depth2", "depth4"):
+    row = ao["depths"][d]
+    for k in ("decode_tok_s", "host_gap_us_per_megastep",
+              "drain_wait_us_per_megastep"):
+        assert row[k] > 0, (d, k)
+# pipelining must shrink the host gap and never move tokens
+assert ao["host_gap_shrink"] > 1.0, ao["host_gap_shrink"]
+assert ao["greedy_equiv_depths"] is True, \
+    "async_overlap: pipelined greedy tokens diverged from depth 1"
 print("[tier1] BENCH_serving.json schema OK "
       f"(q4/bf16 @K8 decode = {prec['q4_over_bf16_k8_decode']}; "
       f"kv q8/bf16 @K8 = {kv['q8_over_bf16_k8_decode']})")

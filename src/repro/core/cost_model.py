@@ -285,11 +285,24 @@ def megastep_time(per_token_s: float, hw: HardwareSpec, k: int = 1, *,
                   weight_format: str = "bf16",
                   cache_bytes: float = 0.0,
                   kv_format: str = "bf16",
-                  kernel_backend: str = "pallas") -> float:
+                  kernel_backend: str = "pallas",
+                  host_drain_s: float = 0.0,
+                  pipeline_depth: int = 1) -> float:
     """Wall time of one K-token serving megastep: one host dispatch +
     K device-resident decode iterations. The per-token dispatch share
     ``dispatch_overhead_s / k`` is the lever the paper's §5 CPU-vs-GPU
     result measures (per-kernel launch cost at batch-1 decode).
+
+    ``host_drain_s`` is the host-side gap per megastep — draining the
+    packed token block (one device→host transfer + the per-token
+    Python bookkeeping) and building the next admission arrays. At
+    ``pipeline_depth=1`` the gap is serial with the device: it adds
+    in full. At depth >= 2 dispatch is async (the drain of megastep N
+    overlaps the device running N+1), so the host gap is hidden up to
+    the device-step time: the steady-state period per megastep is
+    ``max(device_s, host_drain_s)`` plus the dispatch overhead that
+    can never be hidden (it sits on the critical path of getting N+1
+    enqueued).
 
     ``carry_bytes`` models the cache/SlotState carry crossing the
     dispatch boundary: without buffer donation the runtime materializes
@@ -311,7 +324,10 @@ def megastep_time(per_token_s: float, hw: HardwareSpec, k: int = 1, *,
                                         kv_format, kernel_backend)
     boundary = 0.0 if donate_carries else \
         carry_bytes / (hw.mem_bw * hw.mem_efficiency)
-    return hw.dispatch_overhead_s + boundary + k * per_token_s
+    device_s = boundary + k * per_token_s
+    if pipeline_depth >= 2:
+        return hw.dispatch_overhead_s + max(device_s, host_drain_s)
+    return hw.dispatch_overhead_s + device_s + host_drain_s
 
 
 def megastep_tokens_per_s(per_token_s: float, hw: HardwareSpec,
@@ -321,7 +337,9 @@ def megastep_tokens_per_s(per_token_s: float, hw: HardwareSpec,
                           weight_format: str = "bf16",
                           cache_bytes: float = 0.0,
                           kv_format: str = "bf16",
-                          kernel_backend: str = "pallas") -> float:
+                          kernel_backend: str = "pallas",
+                          host_drain_s: float = 0.0,
+                          pipeline_depth: int = 1) -> float:
     return tokens_per_second(
         megastep_time(per_token_s, hw, k, carry_bytes=carry_bytes,
                       donate_carries=donate_carries,
@@ -329,7 +347,9 @@ def megastep_tokens_per_s(per_token_s: float, hw: HardwareSpec,
                       weight_format=weight_format,
                       cache_bytes=cache_bytes,
                       kv_format=kv_format,
-                      kernel_backend=kernel_backend), k)
+                      kernel_backend=kernel_backend,
+                      host_drain_s=host_drain_s,
+                      pipeline_depth=pipeline_depth), k)
 
 
 # ---------------------------------------------------------------------------

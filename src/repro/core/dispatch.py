@@ -73,6 +73,19 @@ class ExecutionPlan:
     # plan's context length. Always bf16 for recurrent families
     # (ssm/hybrid) — the engine treats kv_quant as a no-op there.
     kv_quant: str = "bf16"
+    # serving-loop pipelining: megasteps kept in flight. 1 = serial
+    # dispatch/drain; 2 = double-buffered — dispatch is async under
+    # JAX, so draining megastep N's token block overlaps the device
+    # running N+1 and the host gap is hidden up to the device-step
+    # time (cost_model.megastep_time's overlap term). Emitted for
+    # decode shapes whenever the analytic twin
+    # (scheduler.simulate_async_overlap) predicts depth 2 >= depth 1;
+    # 1 for prefill/training shapes (no steady-state loop to overlap).
+    # Caveat measured on jax-0.4.37-CPU: depth >= 2 needs
+    # donate_carries=False — donating a buffer that is itself a
+    # pending megastep's output forces the jit call to execute inline,
+    # serializing the very dispatch chain pipelining relies on.
+    pipeline_depth: int = 1
     # Which dequant execution the plan was priced against: "pallas"
     # (fused in-register dequant — quant_matmul + the quantized decode-
     # attention kernel) or "xla" (materialized bf16 unpack before the
@@ -104,6 +117,7 @@ class ExecutionPlan:
                  f"fuse_gate_up={self.fuse_gate_up} "
                  f"megastep_k={self.megastep_k} "
                  f"admission={self.admission} "
+                 f"depth={self.pipeline_depth} "
                  f"donate={self.donate_carries} "
                  f"quant={self.quant_policy} "
                  f"kv_quant={self.kv_quant} "
@@ -189,6 +203,7 @@ def plan(cfg: ModelConfig, shape: InputShape,
     megastep_k = 1
     admission = "chunked"
     kv_quant = "bf16"
+    pipeline_depth = 1
     if shape.kind == "decode":
         step_s = cm.graph_time_wave(g, hw)
         megastep_k = choose_megastep_k(hw, step_s,
@@ -198,6 +213,7 @@ def plan(cfg: ModelConfig, shape: InputShape,
         # the dispatch+stall cost of a dedicated prefill (long prompts
         # on compute-rich hardware).
         from repro.core.scheduler import (simulate_admission,
+                                          simulate_async_overlap,
                                           simulate_kv_precision,
                                           simulate_precision)
         adm = simulate_admission(
@@ -206,6 +222,15 @@ def plan(cfg: ModelConfig, shape: InputShape,
             max_new=max_new, kv_len=max(shape.seq_len, 1))
         if adm["stall"].tokens_per_s > adm["chunked"].tokens_per_s:
             admission = "stall"
+        # Pipelining: double-buffer the dispatch/drain loop when the
+        # overlap model says hiding the host gap behind the device
+        # megastep pays (it always does once the gap is nonzero — the
+        # knob exists so token-identity pins can force depth 1).
+        ovl = simulate_async_overlap(
+            cfg, hw, k=megastep_k, batch=max(shape.global_batch, 1),
+            kv_len=max(shape.seq_len, 1), kernel_backend=kernel_backend)
+        if ovl[2].tokens_per_s > ovl[1].tokens_per_s:
+            pipeline_depth = 2
         if allow_quant and quant_policy != "bf16":
             # Cross-check the per-GEMM choice against the analytic
             # precision sweep: pick the fastest quality-allowed format
@@ -245,7 +270,8 @@ def plan(cfg: ModelConfig, shape: InputShape,
         fuse_gate_up=cfg.glu, decisions=decisions,
         megastep_k=megastep_k, admission=admission,
         donate_carries=True, quant_policy=quant_policy,
-        kv_quant=kv_quant, kernel_backend=kernel_backend)
+        kv_quant=kv_quant, pipeline_depth=pipeline_depth,
+        kernel_backend=kernel_backend)
 
 
 def choose_megastep_k(hw: cm.HardwareSpec, step_s: float, *,

@@ -396,6 +396,56 @@ def simulate_admission(cfg: ModelConfig,
     }
 
 
+def simulate_async_overlap(cfg: ModelConfig,
+                           hw: Optional[cm.HardwareSpec] = None, *,
+                           threads: int = 4, kv_len: int = 64,
+                           weight_format: str = "f16", batch: int = 1,
+                           k: int = 8,
+                           host_drain_per_token_s: float = 8e-6,
+                           depths: Sequence[int] = (1, 2),
+                           donate_carries: bool = True,
+                           kernel_backend: str = "pallas",
+                           ) -> Dict[int, VersionResult]:
+    """Serial vs double-buffered serving loop, analytically.
+
+    The host pays a per-megastep gap — draining the packed token block
+    (device→host transfer + per-token Python bookkeeping) and staging
+    the next admission arrays — modelled as
+    ``host_drain_per_token_s * k * batch``. At ``pipeline_depth=1``
+    that gap sits between device megasteps; at depth >= 2 dispatch is
+    async under JAX, so draining megastep N overlaps the device
+    running N+1 and the gap is hidden up to the device-step time
+    (:func:`cost_model.megastep_time`'s overlap term). The predicted
+    win saturates at ``host / (device + host)`` of the serial wall —
+    on a device-bound loop the drain hides completely; on a
+    host-bound loop the device starves instead and depth stops
+    helping. The analytic twin of ``serving_bench --sweep async``.
+    """
+    hw = hw or cm.a17_cpu(threads)
+    g = build_decoder_graph(cfg, seq=1, kv_len=kv_len, batch=batch,
+                            weight_format=weight_format, fused=True)
+    per_tok = cm.graph_time_wave(g, hw, overlap_efficiency=0.92) \
+        + _xla_unpack_penalty_s(g, weight_format, hw, kernel_backend)
+    carry = cm.decode_carry_bytes(cfg, batch, kv_len)
+    host = host_drain_per_token_s * k * batch
+    boundary = 0.0 if donate_carries else \
+        carry / (hw.mem_bw * hw.mem_efficiency)
+    device = boundary + k * per_tok
+    out = {}
+    for d in depths:
+        t = cm.megastep_time(per_tok, hw, k, carry_bytes=carry,
+                             donate_carries=donate_carries,
+                             host_drain_s=host, pipeline_depth=d)
+        out[d] = VersionResult(
+            f"pipeline_depth{d}", t / k,
+            cm.tokens_per_second(t, 1) * k * batch, len(g.nodes),
+            f"device {device*1e6:.0f}us + host drain {host*1e6:.0f}us "
+            + ("serial" if d < 2 else
+               f"overlapped (hidden {min(host, device)*1e6:.0f}us)")
+            + f" + dispatch {hw.dispatch_overhead_s*1e6:.0f}us")
+    return out
+
+
 def backend_throughput(cfg: ModelConfig, backend: str, *,
                        threads: int = 2, weight_format: str = "f16",
                        kv_len: int = 64, seq: int = 1,

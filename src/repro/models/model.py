@@ -603,6 +603,8 @@ class Model:
         stall-admission path). Returns the generated token list
         (first sampled token included, stops at EOS / max_new).
         """
+        if max_new_tokens <= 0:
+            return []                # zero budget: nothing to generate
         if not hasattr(self, "_ref_jits"):
             self._ref_jits = (jax.jit(self.prefill),
                               jax.jit(self.decode_step))

@@ -1,6 +1,6 @@
 """Continuous-batching serving engine: chunked prefill admission,
-per-slot sampling, and a device-resident multi-token decode "megastep"
-with donated carries.
+per-slot sampling, and a pipelined device-resident multi-token decode
+"megastep" loop with donated carries.
 
 The engine owns a fixed-size decode batch (``slots``). Requests queue
 up, and every ``step()`` runs one **megastep**: ``megastep_k`` decode
@@ -8,6 +8,35 @@ iterations fused into a single jitted ``jax.lax.scan`` that threads
 (cache, SlotState) on device and returns a ``(3, K, slots)`` block of
 (tokens, emission mask, prefill progress) — one dispatch and one
 device→host transfer per K tokens instead of per token.
+
+**Pipelined dispatch/drain** (``pipeline_depth``): megastep dispatch
+is asynchronous under JAX, so ``step()`` is split into a dispatch half
+(stage the admission arrays from the host's current slot view, launch
+megastep N+1) and a drain half (block on megastep N's packed token
+block — the loop's ONE synchronization point, ``np.asarray(block)``).
+With ``pipeline_depth=1`` the two halves run back-to-back (the serial
+PR-1/2 loop: the device idles while the host unpacks K×slots tokens
+and builds the next admission arrays). With ``pipeline_depth=2``
+exactly one megastep stays in flight: while the device runs N+1, the
+host drains N and stages N+2's admissions — the host-side gap between
+device steps (the paper's §5 dispatch-overhead story, on our side of
+the fence) is hidden up to the device-step time.
+
+Why token identity survives pipelining: slots are independent, and the
+host's view of slot state is allowed to go stale by one megastep.
+Admissions staged while N is in flight target N+1's slot view —
+a slot the host believes free was already idle (frozen cache, no
+emission) throughout N, and a slot retired *inside* N keeps emitting
+nothing under the frozen write mask until the host drains N and
+observes it. Each in-flight block carries a snapshot of its slot
+occupants at dispatch time, so drained tokens are attributed to the
+request that actually rode that megastep, and the host prompt-cursor
+mirror is only advanced from blocks whose occupant is still the live
+request. The per-request token streams are therefore byte-identical
+to the serial engine's (the property suite pins depth>1 == depth 1
+across every cache family, admission mode and K); only *latency*
+moves — a slot freed inside N is refilled at N+2 instead of N+1, and
+one trailing all-idle megastep is dispatched per queue drain.
 
 Why: the paper's §5 headline (2-thread CPU 17 tok/s beats the GPU's
 12.8 at batch-1 decode) is a *dispatch-overhead* result, not a FLOPs
@@ -91,6 +120,7 @@ class Request:
     # filled by the engine:
     output: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    cancelled: bool = False          # retired via ServingEngine.cancel()
 
 
 @dataclasses.dataclass
@@ -102,7 +132,13 @@ class EngineStats:
     prefill_batches: int = 0     # stall-path prefill dispatches
     inscan_admissions: int = 0   # requests admitted inside the megastep
     chunk_refills: int = 0       # prompt chunk buffers refreshed
+    cancelled: int = 0           # requests retired via cancel()
     decode_wall_s: float = 0.0   # wall time in megastep dispatch + drain
+    # pipelining attribution: where the decode wall actually goes
+    stage_wall_s: float = 0.0    # host time building admission arrays
+    drain_wait_s: float = 0.0    # host blocked on the device→host block
+                                 # transfer (shrinks when pipelining
+                                 # overlaps drain N with megastep N+1)
 
 
 @jax.tree_util.register_dataclass
@@ -157,7 +193,8 @@ class ServingEngine:
                  donate_carries: bool = True,
                  quant_policy: Optional[str] = None,
                  kv_quant: Optional[str] = None,
-                 kernels: Optional[str] = None):
+                 kernels: Optional[str] = None,
+                 pipeline_depth: int = 1):
         # Kernel backend is a serving dimension like kv_quant: one
         # switch lights up the whole fused-dequant Pallas path (the
         # quant_matmul decode GEMVs *and* the quantized-KV decode
@@ -243,6 +280,16 @@ class ServingEngine:
         self.prefill_chunk = int(prefill_chunk) if prefill_chunk else \
             max(self.megastep_k, 16)
         self.donate_carries = donate_carries
+        # dispatched-but-undrained megasteps the loop keeps in flight:
+        # 1 = serial dispatch→drain (the PR-1/2 loop), 2 = double-
+        # buffered (drain N overlaps megastep N+1 on device). Host-side
+        # orchestration only — the compiled megastep is depth-agnostic,
+        # so the attribute may be reassigned between steps.
+        if int(pipeline_depth) < 1:
+            raise ValueError(
+                f"pipeline_depth must be >= 1 (got {pipeline_depth}); "
+                "1 is the serial loop, 2 keeps one megastep in flight")
+        self.pipeline_depth = int(pipeline_depth)
 
         self.queue: Deque[Request] = collections.deque()
 
@@ -277,6 +324,9 @@ class ServingEngine:
         self.state = _init_slot_state(self.slots, self.prefill_chunk,
                                       st_key)
         self.active: List[Optional[Request]] = [None] * self.slots
+        # pipelined loop: (device block, slot-occupant snapshot) per
+        # dispatched-but-undrained megastep, oldest first
+        self._inflight: Deque = collections.deque()
         # host mirror of prefill progress (from the megastep's pos row)
         self._prefill_pos: List[int] = [0] * self.slots
         # slots currently serving a stochastic (temperature>0) request;
@@ -360,7 +410,67 @@ class ServingEngine:
 
     # -- public API --------------------------------------------------------
     def submit(self, req: Request) -> None:
+        """Queue a request. Admission edge cases are resolved here, not
+        in-scan: an empty prompt is rejected (it would feed a junk PAD
+        token through ``decode_step`` into cache position 0), and
+        ``max_new_tokens=0`` short-circuits to an empty completed
+        output (the in-scan path checks ``gen_len >= max_new`` only
+        *after* emission, so an admitted zero-budget request would
+        still emit one token)."""
+        if len(np.asarray(req.prompt)) == 0:
+            raise ValueError(
+                f"request {req.uid}: empty prompt — decode needs at "
+                "least one prompt token (admitting one would write a "
+                "junk PAD embedding into cache position 0)")
+        if req.max_new_tokens < 0:
+            raise ValueError(
+                f"request {req.uid}: max_new_tokens must be >= 0 "
+                f"(got {req.max_new_tokens})")
+        if req.max_new_tokens == 0:
+            req.done = True          # nothing to generate: legal no-op
+            return
         self.queue.append(req)
+
+    def cancel(self, req: Request) -> bool:
+        """Retire a request immediately. A queued request is removed
+        from the queue; an active one has its slot forced to
+        ``PHASE_IDLE`` — the same frozen-write retirement the in-scan
+        EOS/length path uses, so the remaining substeps of any
+        in-flight megastep leave its cache untouched and its late
+        tokens are dropped at drain time. The freed slot is refilled
+        at the next admission. Returns True if the request was live."""
+        if req.done:
+            return False
+        try:
+            self.queue.remove(req)
+            req.done = req.cancelled = True
+            self.stats.cancelled += 1
+            return True
+        except ValueError:
+            pass
+        for s, r in enumerate(self.active):
+            if r is req:
+                self.state = dataclasses.replace(
+                    self.state,
+                    phase=self.state.phase.at[s].set(PHASE_IDLE))
+                self.active[s] = None
+                self._stochastic_slots.discard(s)
+                req.done = req.cancelled = True
+                self.stats.cancelled += 1
+                return True
+        return False
+
+    @property
+    def in_flight(self) -> int:
+        """Megasteps dispatched but not yet drained (< pipeline_depth
+        except transiently inside ``step()``)."""
+        return len(self._inflight)
+
+    def has_work(self) -> bool:
+        """True while anything is queued, occupying a slot, or riding
+        an undrained megastep — the front-end's idle test."""
+        return bool(self.queue) or bool(self._inflight) or \
+            any(r is not None for r in self.active)
 
     def _take_free(self) -> List:
         free = [s for s in range(self.slots) if self.active[s] is None]
@@ -570,29 +680,51 @@ class ServingEngine:
         return cache, state, jnp.stack(
             [toks, emitted.astype(jnp.int32), pos])
 
-    def step(self) -> int:
-        """Admit what fits, run one megastep (up to ``megastep_k``
-        tokens per decoding slot), drain its token block. Returns
-        #slots still occupied."""
-        admit = self._fill_slots()
-        if not any(r is not None for r in self.active):
-            return 0
+    def _dispatch_megastep(self) -> bool:
+        """Dispatch half of the pipelined loop: stage admissions from
+        the host's current slot view and launch one megastep. Dispatch
+        is asynchronous under JAX — the returned block rides
+        ``_inflight`` (with a snapshot of its slot occupants) until
+        ``_drain_oldest`` synchronizes on it. Returns False when no
+        slot is live in the host view (nothing to launch)."""
         t0 = time.perf_counter()
+        admit = self._fill_slots()
+        self.stats.stage_wall_s += time.perf_counter() - t0
+        if not any(r is not None for r in self.active):
+            return False
         self.cache, self.state, block = self._megastep(
             self.params, self.cache, self.state, admit,
             not self._stochastic_slots)
+        self._inflight.append((block, tuple(self.active)))
+        self.stats.megasteps += 1
+        self.stats.steps += self.megastep_k
+        return True
+
+    def _drain_oldest(self) -> None:
+        """Drain half: block on the oldest in-flight megastep's packed
+        token block (the loop's one sync point), then attribute tokens
+        and retirements to the requests that occupied the slots *when
+        that megastep was dispatched* — under pipelining the host view
+        may have moved on (a slot freed by an earlier drain can
+        already hold a newer request, whose rows in this older block
+        are all idle)."""
+        block, occupants = self._inflight.popleft()
+        t0 = time.perf_counter()
         block = np.asarray(block)        # ONE host transfer per K tokens
+        self.stats.drain_wait_s += time.perf_counter() - t0
         toks, emitted = block[0], block[1].astype(bool)
         last_pos = block[2][-1]
-        self.stats.megasteps += 1
-        self.stats.steps += toks.shape[0]
         for s in range(self.slots):
-            if self.active[s] is not None:
+            # advance the prompt-cursor mirror only while the slot
+            # still serves the request this block belongs to — a stale
+            # pos row from a retired occupant must never leak into a
+            # newer request's chunk-refill base
+            if occupants[s] is not None and self.active[s] is occupants[s]:
                 self._prefill_pos[s] = int(last_pos[s])
         for k in range(toks.shape[0]):
             for s in range(self.slots):
-                req = self.active[s]
-                if req is None or not emitted[k, s]:
+                req = occupants[s]
+                if req is None or req.cancelled or not emitted[k, s]:
                     continue
                 tok = int(toks[k, s])
                 req.output.append(tok)
@@ -600,15 +732,33 @@ class ServingEngine:
                 if tok == req.eos_id or len(req.output) >= \
                         req.max_new_tokens:
                     req.done = True      # device already froze this slot
-                    self.active[s] = None
-                    self._stochastic_slots.discard(s)
+                    if self.active[s] is req:
+                        self.active[s] = None
+                        self._stochastic_slots.discard(s)
+
+    def step(self) -> int:
+        """Admit what fits, dispatch one megastep (up to ``megastep_k``
+        tokens per decoding slot), and drain the oldest in-flight block
+        once ``pipeline_depth`` megasteps are outstanding — at depth 1
+        that is the megastep just dispatched (serial); at depth 2 the
+        previous one, so its drain and the next admission staging
+        overlap the dispatched megastep's device execution. Returns
+        #slots still occupied in the host view."""
+        t0 = time.perf_counter()
+        if self._dispatch_megastep():
+            while len(self._inflight) >= max(self.pipeline_depth, 1):
+                self._drain_oldest()
+        else:
+            # nothing live in the host view: flush the pipeline so
+            # in-flight retirements land and admission can resume
+            while self._inflight:
+                self._drain_oldest()
         self.stats.decode_wall_s += time.perf_counter() - t0
         return sum(r is not None for r in self.active)
 
     def run(self, max_steps: int = 10000) -> None:
         """Drain queue + active slots (``max_steps`` megasteps)."""
         for _ in range(max_steps):
-            if not self.queue and not any(
-                    r is not None for r in self.active):
+            if not self.has_work():
                 return
             self.step()

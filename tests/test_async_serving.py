@@ -1,0 +1,343 @@
+"""Async front-end + admission edge-case suite (PR-6 satellites).
+
+Covers the pieces the property suite's token-identity pin doesn't:
+
+- ``ServingEngine.submit`` admission edge cases: empty prompt and
+  negative budget rejected at submit time, ``max_new_tokens=0``
+  short-circuits to a completed empty output — each held to
+  ``Model.reference_decode`` where a reference exists.
+- ``ServingEngine.cancel`` at every lifecycle stage (queued,
+  mid-prefill, mid-decode), including that a cancellation leaves the
+  engine healthy: a request submitted *after* the cancel still matches
+  the single-request reference (the frozen-write retirement path left
+  no cache corruption behind).
+- ``AsyncServingFrontend``: streaming callbacks, deadline expiry
+  (``DeadlineExceeded`` carrying partial tokens, ``stats.cancelled``
+  incremented), task cancellation, backpressure bound, and greedy
+  results identical to the reference loop.
+- ``launch.serve.build_parser``: the ``--reduced`` flag is a
+  ``BooleanOptionalAction`` — reduced by default, ``--no-reduced``
+  selects the paper-size model (the PR-6 bugfix; the old
+  ``store_true`` default-False silently ran full-size).
+
+The async tests run coroutines with ``asyncio.run`` inside ordinary
+sync test functions (no pytest-asyncio dependency). Engines are cached
+module-wide and ``reset()`` between tests, same trick as the property
+suite.
+"""
+import asyncio
+
+import pytest
+
+import jax
+import numpy as np
+
+from repro.configs import get_config, reduced
+from repro.models import Model
+from repro.serving import Request, ServingEngine
+from repro.launch.serve import (AsyncServingFrontend, DeadlineExceeded,
+                                build_parser)
+
+_CACHE = {}
+
+
+def _stack(slots=2, k=4):
+    key = (slots, k)
+    if key not in _CACHE:
+        cfg = reduced(get_config("deepseek-7b"), d_model=64, d_ff=128,
+                      vocab_size=256, num_heads=2, num_kv_heads=1)
+        m = Model(cfg)
+        params = m.init(jax.random.PRNGKey(0))
+        eng = ServingEngine(m, params, slots=slots, max_len=64,
+                            megastep_k=k, admission="chunked",
+                            prefill_chunk=16)
+        _CACHE[key] = (cfg, m, params, eng)
+    cfg, m, params, eng = _CACHE[key]
+    eng.reset()
+    eng.pipeline_depth = 1
+    return cfg, m, params, eng
+
+
+def _prompt(cfg, n=6, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.integers(1, cfg.vocab_size, size=n).astype(np.int32)
+
+
+# -- submit() admission edge cases ------------------------------------
+
+
+def test_submit_rejects_empty_prompt():
+    cfg, m, params, eng = _stack()
+    with pytest.raises(ValueError, match="empty prompt"):
+        eng.submit(Request(uid=0, prompt=np.zeros(0, np.int32),
+                           max_new_tokens=4))
+    assert not eng.has_work()
+
+
+def test_submit_rejects_negative_budget():
+    cfg, m, params, eng = _stack()
+    with pytest.raises(ValueError, match="max_new_tokens"):
+        eng.submit(Request(uid=0, prompt=_prompt(cfg),
+                           max_new_tokens=-1))
+
+
+def test_submit_zero_budget_matches_reference():
+    """max_new_tokens=0 completes immediately with an empty output —
+    exactly what the reference loop produces for a zero budget — and
+    never occupies a slot (an admitted zero-budget request would emit
+    one token, because the in-scan retirement check runs post-emit)."""
+    cfg, m, params, eng = _stack()
+    p = _prompt(cfg)
+    req = Request(uid=0, prompt=p, max_new_tokens=0)
+    eng.submit(req)
+    assert req.done and req.output == []
+    assert not eng.has_work()
+    assert req.output == m.reference_decode(params, p, 0)
+
+
+def test_zero_budget_next_to_live_requests():
+    """Zero-budget no-ops interleaved with real requests don't perturb
+    the batch: the live requests still match the reference."""
+    cfg, m, params, eng = _stack()
+    live = [Request(uid=i, prompt=_prompt(cfg, 4 + i, seed=i),
+                    max_new_tokens=6) for i in range(2)]
+    noop = Request(uid=9, prompt=_prompt(cfg), max_new_tokens=0)
+    eng.submit(live[0])
+    eng.submit(noop)
+    eng.submit(live[1])
+    eng.run()
+    assert noop.output == []
+    for r in live:
+        assert r.output == m.reference_decode(params, r.prompt,
+                                              r.max_new_tokens)
+
+
+def test_pipeline_depth_validated():
+    cfg, m, params, eng = _stack()
+    with pytest.raises(ValueError, match="pipeline_depth"):
+        ServingEngine(m, params, slots=2, max_len=64, pipeline_depth=0)
+
+
+# -- cancel() across the request lifecycle ----------------------------
+
+
+def test_cancel_queued_request():
+    cfg, m, params, eng = _stack(slots=1)
+    a = Request(uid=0, prompt=_prompt(cfg), max_new_tokens=4)
+    b = Request(uid=1, prompt=_prompt(cfg, seed=1), max_new_tokens=4)
+    eng.submit(a)
+    eng.submit(b)                      # queued behind a on the 1 slot
+    assert eng.cancel(b)
+    assert b.cancelled and b.done and b.output == []
+    eng.run()
+    assert a.output == m.reference_decode(params, a.prompt, 4)
+    assert eng.stats.cancelled == 1
+
+
+def test_cancel_mid_prefill():
+    """Cancel while the slot is still consuming prompt tokens (long
+    prompt, K=1 so one step admits at most a few chunk tokens). The
+    retired slot frees immediately and the neighbour is unharmed."""
+    cfg, m, params, eng = _stack(slots=2, k=1)
+    long_p = _prompt(cfg, n=40, seed=2)
+    victim = Request(uid=0, prompt=long_p, max_new_tokens=8)
+    other = Request(uid=1, prompt=_prompt(cfg, seed=3), max_new_tokens=8)
+    eng.submit(victim)
+    eng.submit(other)
+    eng.step()                         # victim is mid-prefill now
+    assert not victim.done
+    assert eng.cancel(victim)
+    assert victim.cancelled and victim.output == []
+    eng.run()
+    assert other.output == m.reference_decode(params, other.prompt, 8)
+    # the freed slot admits and serves a fresh request correctly
+    late = Request(uid=2, prompt=_prompt(cfg, seed=4), max_new_tokens=6)
+    eng.submit(late)
+    eng.run()
+    assert late.output == m.reference_decode(params, late.prompt, 6)
+
+
+def test_cancel_mid_decode_keeps_partial_output():
+    cfg, m, params, eng = _stack(slots=1, k=4)
+    req = Request(uid=0, prompt=_prompt(cfg), max_new_tokens=32)
+    eng.submit(req)
+    eng.step()                         # prefill + first decode tokens
+    while not req.output and not req.done:
+        eng.step()
+    got = list(req.output)
+    assert 0 < len(got) < 32
+    assert eng.cancel(req)
+    assert req.done and req.output == got      # partial stream kept
+    # partial tokens are a prefix of the reference stream
+    ref = m.reference_decode(params, req.prompt, 32)
+    assert got == ref[:len(got)]
+    assert not eng.has_work()
+    # cancel of a finished request is a no-op
+    assert not eng.cancel(req)
+    assert eng.stats.cancelled == 1
+
+
+def test_cancel_during_inflight_megastep_pipelined():
+    """Cancellation composes with pipelining: retire a slot while a
+    dispatched megastep is still in flight — late tokens from that
+    megastep must be dropped, and the stream stays a reference
+    prefix."""
+    cfg, m, params, eng = _stack(slots=2, k=4)
+    eng.pipeline_depth = 2
+    req = Request(uid=0, prompt=_prompt(cfg), max_new_tokens=32)
+    eng.submit(req)
+    eng.step()                         # dispatches ahead of the drain
+    while not req.output and not req.done:
+        eng.step()
+    got = list(req.output)
+    assert eng.cancel(req)
+    eng.run()                          # flush the in-flight megastep
+    assert eng.in_flight == 0
+    assert req.output == got           # no late tokens leaked in
+    ref = m.reference_decode(params, req.prompt, 32)
+    assert req.output == ref[:len(got)]
+
+
+# -- AsyncServingFrontend ---------------------------------------------
+
+
+def test_frontend_streams_and_matches_reference():
+    cfg, m, params, eng = _stack()
+    prompts = [_prompt(cfg, 4 + i, seed=10 + i) for i in range(5)]
+    streamed = {i: [] for i in range(5)}
+
+    async def drive():
+        fe = AsyncServingFrontend(eng, max_pending=3)
+        outs = await asyncio.gather(*[
+            fe.generate(p, max_new_tokens=6,
+                        on_token=streamed[i].append)
+            for i, p in enumerate(prompts)])
+        await fe.close()
+        return outs
+
+    outs = asyncio.run(drive())
+    for i, p in enumerate(prompts):
+        ref = m.reference_decode(params, p, 6)
+        assert outs[i] == ref
+        assert streamed[i] == ref      # callback saw every token once
+
+
+def test_frontend_backpressure_bound():
+    """With max_pending=2 the engine never holds more than 2 admitted-
+    but-unfinished requests, however many generate() calls are made."""
+    cfg, m, params, eng = _stack(slots=2)
+    high_water = 0
+
+    async def drive():
+        nonlocal high_water
+        fe = AsyncServingFrontend(eng, max_pending=2)
+
+        def watch(_tok, fe=fe):
+            nonlocal high_water
+            high_water = max(high_water,
+                             fe.max_pending - fe._sem._value)
+
+        outs = await asyncio.gather(*[
+            fe.generate(_prompt(cfg, seed=20 + i), max_new_tokens=4,
+                        on_token=watch)
+            for i in range(6)])
+        await fe.close()
+        return outs
+
+    outs = asyncio.run(drive())
+    assert len(outs) == 6 and all(len(o) == 4 for o in outs)
+    assert high_water <= 2
+
+    with pytest.raises(ValueError, match="max_pending"):
+        AsyncServingFrontend(eng, max_pending=0)
+
+
+def test_frontend_deadline_expiry_retires_and_recovers():
+    """A request with an impossible deadline raises DeadlineExceeded
+    (partial tokens attached), increments the engine's cancel counter,
+    and leaves the engine serving correct tokens afterwards."""
+    cfg, m, params, eng = _stack(slots=1, k=1)
+    p = _prompt(cfg, n=12, seed=30)
+    base = eng.stats.cancelled
+
+    async def drive():
+        fe = AsyncServingFrontend(eng)
+        try:
+            await fe.generate(p, max_new_tokens=500, deadline_s=0.0)
+        except DeadlineExceeded as e:
+            err = e
+        else:
+            err = None
+        # engine must still be healthy: fresh request completes
+        ok = await fe.generate(p, max_new_tokens=5)
+        await fe.close()
+        return err, ok
+
+    err, ok = asyncio.run(drive())
+    assert err is not None
+    assert err.tokens == []            # deadline hit before admission
+    assert eng.stats.cancelled == base + 1
+    assert ok == m.reference_decode(params, p, 5)
+
+
+def test_frontend_propagates_submit_rejection():
+    cfg, m, params, eng = _stack()
+
+    async def drive():
+        fe = AsyncServingFrontend(eng)
+        with pytest.raises(ValueError, match="empty prompt"):
+            await fe.generate(np.zeros(0, np.int32), max_new_tokens=4)
+        toks = await fe.generate(_prompt(cfg), max_new_tokens=0)
+        await fe.close()
+        return toks
+
+    assert asyncio.run(drive()) == []
+
+
+def test_frontend_task_cancellation_cancels_request():
+    """Cancelling the awaiting asyncio task retires the request in the
+    engine (the staged-cancel path), and the loop keeps serving."""
+    cfg, m, params, eng = _stack(slots=1, k=1)
+    base = eng.stats.cancelled
+
+    async def drive():
+        fe = AsyncServingFrontend(eng)
+        victim = asyncio.ensure_future(
+            fe.generate(_prompt(cfg, n=20, seed=40),
+                        max_new_tokens=500))
+        await asyncio.sleep(0.05)      # let it admit and start
+        victim.cancel()
+        try:
+            await victim
+        except asyncio.CancelledError:
+            pass
+        survivor = await fe.generate(_prompt(cfg, seed=41),
+                                     max_new_tokens=5)
+        await fe.close()
+        return survivor
+
+    survivor = asyncio.run(drive())
+    assert eng.stats.cancelled >= base + 1
+    ref = m.reference_decode(params, _prompt(cfg, seed=41), 5)
+    assert survivor == ref
+
+
+# -- CLI flag parsing (the --reduced bugfix) --------------------------
+
+
+def test_reduced_flag_default_and_both_branches():
+    ap = build_parser()
+    assert ap.parse_args([]).reduced is True           # safe default
+    assert ap.parse_args(["--reduced"]).reduced is True
+    assert ap.parse_args(["--no-reduced"]).reduced is False
+
+
+def test_parser_async_knobs():
+    ap = build_parser()
+    args = ap.parse_args(["--pipeline-depth", "2", "--frontend",
+                          "--deadline-s", "0.5"])
+    assert args.pipeline_depth == 2 and args.frontend
+    assert args.deadline_s == 0.5
+    defaults = ap.parse_args([])
+    assert defaults.pipeline_depth == 1 and not defaults.frontend
+    assert defaults.deadline_s is None

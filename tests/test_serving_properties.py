@@ -76,6 +76,10 @@ def _engine(arch, slots, k, mode, quant="bf16", kv="bf16",
             admission=mode, prefill_chunk=16, kernels=kernels)
     eng = _ENGINES[key]
     eng.reset()
+    # pipeline_depth is host-side orchestration over the same compiled
+    # executable, so the async dimension mutates it on cached engines;
+    # restore the serial default for every other test
+    eng.pipeline_depth = 1
     return eng
 
 
@@ -345,6 +349,42 @@ def test_pallas_engine_matches_reference(seed, quant, k):
                 stepwise_prefill=(mode == "chunked"))
             assert r.output == ref, (mode, quant, k, r.uid,
                                      r.output, ref)
+
+
+@given(st.integers(0, 2 ** 31 - 1), st.sampled_from(ARCHS),
+       st.sampled_from([1, 4, 8]),
+       st.sampled_from(["chunked", "stall"]))
+@settings(max_examples=6, deadline=None)
+def test_pipelined_engine_token_identical(seed, arch, k, mode):
+    """The async dimension (PR-6 tentpole): ``pipeline_depth > 1``
+    keeps megasteps in flight while the host drains older blocks and
+    stages admissions against a view that may lag the device by up to
+    depth-1 megasteps. That staleness must move *latency only* —
+    greedy token streams stay identical to the serial depth-1 engine
+    across all four cache families, both admission modes, and
+    K ∈ {1, 4, 8}: occupant snapshots pin each drained block to the
+    requests that rode it, retired slots' frozen write masks keep
+    late in-flight substeps from touching their caches, and admission
+    only targets slots idle throughout every in-flight megastep."""
+    cfg, m, params = _model(arch)
+    rng = np.random.default_rng(seed)
+    reqs_spec = [(p.prompt, p.max_new_tokens)
+                 for p in _random_requests(cfg, rng,
+                                           int(rng.integers(2, 6)))]
+    outs = {}
+    for depth in (1, 2, 3):
+        eng = _engine(arch, 2, k, mode)
+        eng.pipeline_depth = depth
+        reqs = [Request(uid=i, prompt=p, max_new_tokens=n)
+                for i, (p, n) in enumerate(reqs_spec)]
+        for r in reqs:
+            eng.submit(r)
+        eng.run()
+        assert all(r.done for r in reqs)
+        assert eng.in_flight == 0        # run() flushed the pipeline
+        outs[depth] = [r.output for r in reqs]
+    assert outs[2] == outs[1], (arch, k, mode)
+    assert outs[3] == outs[1], (arch, k, mode)
 
 
 @given(st.integers(0, 2 ** 31 - 1), st.floats(0.5, 2.0))
