@@ -1,7 +1,8 @@
 """End-to-end serving benchmark: the ServingEngine decoding batched
 requests on a reduced model (live execution).
 
-Six sweeps (``--sweep megastep|mixed|precision|kv|kernels|async|all``):
+Seven sweeps
+(``--sweep megastep|mixed|precision|kv|kernels|async|paging|all``):
 
 1. **Megastep sweep** — ``K ∈ {1, 4, 8, 16}``, all requests queued
    upfront (stall admission, the PR-1 configuration): K=1 reproduces
@@ -69,11 +70,32 @@ Six sweeps (``--sweep megastep|mixed|precision|kv|kernels|async|all``):
    ``simulate_async_overlap`` provides the analytic prediction.
    Emitted as the JSON's ``async_overlap`` section.
 
+7. **Paging sweep** — dense per-slot cache vs the paged pool
+   (``page_size ∈ {8, 16, 32}``) through the engine: greedy
+   token-identity (paging moves bytes, never tokens), decode tok/s
+   (the gather-indirection tax, a pure cost at prefix hit rate 0),
+   and the tentpole claim — *cache bytes scale with live tokens*:
+   the dense engine preallocates ``slots x max_len`` rows while the
+   paged pool's peak in-use blocks track the workload's live token
+   count across increasing loads. A prefix-cache leg serves a
+   shared-system-prompt workload (the Xiao et al. mobile traffic
+   shape) and records hit/hit-token counters plus the admission
+   substeps the copy-on-write mapping saves.
+   ``simulate_paging`` provides the analytic twin. Emitted as the
+   JSON's ``paging`` section.
+
 Emits ``BENCH_serving.json`` at the repo root (tok/s per K, the K8/K1
 speedup, the chunked/stall mixed-workload ratio, the precision table +
 greedy equivalence bits) so future PRs have a perf trajectory to
 regress against. Sections are merged into an existing file, so running
 one sweep never clobbers another's numbers.
+
+Methodology (standing note, enforced since PR 9): every timed decode
+region auto-extends its pass count until it spans at least
+``MIN_TIMED_S`` (0.15 s) — shorter regions measured 0.63-1.49x
+run-to-run swings on this shared container — and each section records
+the achieved duration (``decode_wall_s``) plus the pass count it took
+(``timed_passes``).
 """
 from __future__ import annotations
 
@@ -97,6 +119,12 @@ N_REQUESTS = 32
 MAX_NEW = 48
 SLOTS = 4
 REPS = 3
+
+# bench methodology floor (PR-3 standing note, enforced here): timed
+# decode regions below this duration swung 0.63-1.49x run-to-run on
+# this shared container, so any region that comes up short auto-extends
+# its pass count until it clears the bar (see _timed_region)
+MIN_TIMED_S = 0.15
 
 # precision sweep: the §5.3 ladder through the serving engine; K=1
 # isolates per-dispatch cost per format, K=8 is the amortized serving
@@ -161,6 +189,20 @@ ASYNC_MAX_NEW = 96
 ASYNC_K = 1
 ASYNC_REPS = 5
 
+# paging sweep: dense vs paged cache through the engine. Loads grow so
+# the peak live token count grows while the dense prealloc stays fixed
+# — the "cache bytes scale with live tokens" claim measured, not
+# asserted. The prefix leg's workload is Xiao et al.'s mobile shape:
+# every request opens with the same system prefix, unique tail after.
+PAGE_SIZES = (8, 16, 32)
+PAGING_MAX_LEN = 128
+PAGING_MAX_NEW = 32
+PAGING_PROMPT_RANGE = (20, 37)
+PAGING_LOADS = (2, 4, 12)      # requests per load point (4 slots)
+PAGING_REPS = 2
+PAGING_PREFIX_LEN = 24         # shared system-prompt head
+PAGING_PREFIX_REQUESTS = 12
+
 # mixed workload: admission-heavy traffic (short prompts, short
 # generations, ~2 arrivals per megastep → every megastep boundary has
 # admissions pending, but riding stays within slot capacity) — the
@@ -192,6 +234,33 @@ def _pass(engine, n: int = N_REQUESTS, max_new: int = MAX_NEW):
     dec_tokens = tokens - (engine.stats.prefills - prefills0)
     return (dt, engine.stats.decode_wall_s - decode0, dec_tokens,
             tokens, [r.output for r in reqs])
+
+
+def _timed_region(pass_fn, timed_idx: int = 0, *,
+                  min_s: float = MIN_TIMED_S, passes: int = 0,
+                  max_passes: int = 64):
+    """One timed region built from consecutive passes of ``pass_fn``.
+
+    ``pass_fn`` returns a tuple of numeric wall/token measurements
+    with the pass outputs last; the numerics are summed across passes
+    and the region keeps extending until the wall at ``timed_idx``
+    reaches ``min_s`` (the bench methodology floor — see module
+    docstring). ``passes`` > 0 pins a *minimum* pass count (so
+    best-of reps compare near-identical workloads), but the ``min_s``
+    floor still applies: a rep that comes in faster than the first
+    one keeps extending rather than recording an under-floor region.
+    Returns ``(*summed_numerics, outputs, n_passes)``.
+    """
+    totals, outputs, n = None, None, 0
+    while (n == 0 or n < passes
+           or (totals[timed_idx] < min_s and n < max_passes)):
+        res = pass_fn()
+        outputs = res[-1]
+        nums = res[:-1]
+        totals = nums if totals is None else \
+            tuple(a + b for a, b in zip(totals, nums))
+        n += 1
+    return (*totals, outputs, n)
 
 
 def _mixed_trace(cfg, seed: int = 0):
@@ -282,14 +351,18 @@ def _sweep_precision(cfg, model, params, out, rows) -> None:
     # noisy prefill phase and vice versa)
     best_dt = {key: float("inf") for key in engines}
     best_dec = {key: float("inf") for key in engines}
-    tokens, dec_tokens, outputs = {}, {}, {}
+    tokens, dec_tokens, outputs, n_passes = {}, {}, {}, {}
     for key, eng in engines.items():             # untimed: compilation
         _pass(eng, PREC_REQUESTS, PREC_MAX_NEW)
         eng.reset()
     for _ in range(PREC_REPS):                   # interleave reps so
         for key, eng in engines.items():         # load hits all alike
-            dt, dec_dt, dec_tokens[key], tokens[key], outputs[key] = \
-                _pass(eng, PREC_REQUESTS, PREC_MAX_NEW)
+            dt, dec_dt, dec_tokens[key], tokens[key], outputs[key], \
+                n = _timed_region(
+                    lambda e=eng: _pass(e, PREC_REQUESTS,
+                                        PREC_MAX_NEW),
+                    1, passes=n_passes.get(key, 0))
+            n_passes[key] = n
             best_dt[key] = min(best_dt[key], dt)
             best_dec[key] = min(best_dec[key], dec_dt)
             eng.reset()
@@ -305,6 +378,7 @@ def _sweep_precision(cfg, model, params, out, rows) -> None:
                 "tok_s": round(tokens[key] / best_dt[key], 1),
                 "decode_wall_s": round(best_dec[key], 4),
                 "tokens": tokens[key],
+                "timed_passes": n_passes[key],
             }
         qbytes = _param_bytes(params_by_fmt[fmt])
         formats[fmt] = {
@@ -331,6 +405,7 @@ def _sweep_precision(cfg, model, params, out, rows) -> None:
     out["precision"] = {
         "requests": PREC_REQUESTS, "max_new": PREC_MAX_NEW,
         "slots": SLOTS, "sampling": "greedy", "admission": "stall",
+        "min_timed_s": MIN_TIMED_S,
         "formats": formats,
         "q4_over_bf16_k8_decode": round(q4 / b16, 2),
         "q8_over_bf16_k8_decode": round(
@@ -388,14 +463,16 @@ def _sweep_kv(cfg, model, params, out, rows) -> None:
                                 megastep_unroll=True, kv_quant=fmt)
         for fmt in KV_PRECISIONS for k in KV_KS}
     best_dec = {key: float("inf") for key in engines}
-    tokens, dec_tokens, outputs = {}, {}, {}
+    tokens, dec_tokens, outputs, n_passes = {}, {}, {}, {}
     for key, eng in engines.items():             # untimed: compilation
         _kv_pass(eng, cfg)
         eng.reset()
     for _ in range(KV_REPS):                     # interleave reps so
         for key, eng in engines.items():         # load hits all alike
-            dec_dt, dec_tokens[key], tokens[key], outputs[key] = \
-                _kv_pass(eng, cfg)
+            dec_dt, dec_tokens[key], tokens[key], outputs[key], n = \
+                _timed_region(lambda e=eng: _kv_pass(e, cfg), 0,
+                              passes=n_passes.get(key, 0))
+            n_passes[key] = n
             best_dec[key] = min(best_dec[key], dec_dt)
             eng.reset()
 
@@ -409,6 +486,7 @@ def _sweep_kv(cfg, model, params, out, rows) -> None:
                 "decode_tok_s": round(dec_tokens[key] / best_dec[key], 1),
                 "decode_wall_s": round(best_dec[key], 4),
                 "tokens": tokens[key],
+                "timed_passes": n_passes[key],
             }
         cbytes = engines[(fmt, 1)].cache_nbytes()
         formats[fmt] = {
@@ -441,6 +519,7 @@ def _sweep_kv(cfg, model, params, out, rows) -> None:
         "max_len": KV_MAX_LEN,
         "prompt_len": f"{KV_PROMPT_RANGE[0]}-{KV_PROMPT_RANGE[1] - 1}",
         "slots": SLOTS, "sampling": "greedy", "admission": "stall",
+        "min_timed_s": MIN_TIMED_S,
         "formats": formats,
         "q8_over_bf16_k8_decode": round(q8 / b16, 2),
         "q4_over_bf16_k8_decode": round(q4 / b16, 2),
@@ -495,14 +574,16 @@ def _sweep_kernels(cfg, model, params, out, rows) -> None:
                                  kv_quant=fmt, kernels=be)
         for fmt in KB_FORMATS for be in KB_BACKENDS}
     best_dec = {key: float("inf") for key in engines}
-    tokens, dec_tokens, outputs = {}, {}, {}
+    tokens, dec_tokens, outputs, n_passes = {}, {}, {}, {}
     for key, eng in engines.items():             # untimed: compilation
         _kb_pass(eng, cfg)
         eng.reset()
     for _ in range(KB_REPS):                     # interleave reps so
         for key, eng in engines.items():         # load hits all alike
-            dec_dt, dec_tokens[key], tokens[key], outputs[key] = \
-                _kb_pass(eng, cfg)
+            dec_dt, dec_tokens[key], tokens[key], outputs[key], n = \
+                _timed_region(lambda e=eng: _kb_pass(e, cfg), 0,
+                              passes=n_passes.get(key, 0))
+            n_passes[key] = n
             best_dec[key] = min(best_dec[key], dec_dt)
             eng.reset()
 
@@ -515,6 +596,7 @@ def _sweep_kernels(cfg, model, params, out, rows) -> None:
                 "decode_tok_s": round(dec_tokens[key] / best_dec[key], 1),
                 "decode_wall_s": round(best_dec[key], 4),
                 "tokens": tokens[key],
+                "timed_passes": n_passes[key],
             }
         formats[fmt] = {
             **per_be,
@@ -544,6 +626,7 @@ def _sweep_kernels(cfg, model, params, out, rows) -> None:
         "requests": KB_REQUESTS, "max_new": KB_MAX_NEW,
         "max_len": KB_MAX_LEN, "megastep_k": KB_K, "slots": SLOTS,
         "sampling": "greedy", "admission": "stall",
+        "min_timed_s": MIN_TIMED_S,
         "note": "pallas timings are interpret-mode on this CPU "
                 "container; the portable claims are token-identity "
                 "and the analytic ordering flip",
@@ -570,13 +653,15 @@ def _sweep_megastep(cfg, model, params, out, rows) -> None:
                for k in KS}
     best = {k: float("inf") for k in KS}
     best_dec = {k: float("inf") for k in KS}
-    outputs, tokens, dec_tokens = {}, {}, {}
+    outputs, tokens, dec_tokens, n_passes = {}, {}, {}, {}
     for k in KS:                         # untimed pass pays compilation
         _pass(engines[k])
     for _ in range(REPS):                # interleave reps across K so
         for k in KS:                     # machine load hits all K alike
-            dt, dec_dt, dec_tokens[k], tokens[k], outputs[k] = \
-                _pass(engines[k])
+            dt, dec_dt, dec_tokens[k], tokens[k], outputs[k], n = \
+                _timed_region(lambda e=engines[k]: _pass(e), 1,
+                              passes=n_passes.get(k, 0))
+            n_passes[k] = n
             best[k] = min(best[k], dt)
             best_dec[k] = min(best_dec[k], dec_dt)
 
@@ -587,14 +672,16 @@ def _sweep_megastep(cfg, model, params, out, rows) -> None:
         # decode-phase throughput isolates the dispatch-amortization
         # lever the sweep is about (prefill cost is identical across K)
         dec_tok_s = dec_tokens[k] / dec_dt
-        dispatches = engines[k].stats.megasteps // (1 + REPS)
+        total_passes = 1 + REPS * n_passes[k]
+        dispatches = engines[k].stats.megasteps // total_passes
         per_k[k] = {"tok_s": round(tok_s, 1),
                     "decode_tok_s": round(dec_tok_s, 1),
                     "wall_s": round(dt, 4),
                     "decode_wall_s": round(dec_dt, 4),
                     "tokens": tokens[k],
+                    "timed_passes": n_passes[k],
                     "dispatches": dispatches}
-        prefill_batches = engines[k].stats.prefill_batches // (1 + REPS)
+        prefill_batches = engines[k].stats.prefill_batches // total_passes
         rows.append((
             f"serving/megastep_k{k}", dec_dt / max(dispatches, 1) * 1e6,
             f"{tokens[k]} tokens in {dt:.2f}s = {tok_s:.0f} tok/s e2e, "
@@ -607,7 +694,7 @@ def _sweep_megastep(cfg, model, params, out, rows) -> None:
         "bench": "serving_megastep_sweep",
         "model": "deepseek-7b reduced (2L, d64, ff128, v256)",
         "slots": SLOTS, "requests": N_REQUESTS, "max_new": MAX_NEW,
-        "sampling": "greedy",
+        "sampling": "greedy", "min_timed_s": MIN_TIMED_S,
         "per_k": {str(k): v for k, v in per_k.items()},
         "k8_over_k1_decode": round(speedup, 2),
         "k8_over_k1_e2e": round(per_k[8]["tok_s"] / per_k[1]["tok_s"], 2),
@@ -628,24 +715,29 @@ def _sweep_mixed(cfg, model, params, out, rows) -> None:
     mixed = {}
     mix_outputs = {}
     mix_best = {}
+    mix_passes = {}
     for mode, eng in mix_engines.items():
         _run_mixed(eng, cfg)             # untimed pass pays compilation
         eng.reset()
     for _ in range(MIX_REPS):            # interleave reps across modes
         for mode, eng in mix_engines.items():   # so machine load hits
-            res = _run_mixed(eng, cfg)          # both alike
+            res = _timed_region(                # both alike
+                lambda e=eng: _run_mixed(e, cfg), 0,
+                passes=mix_passes.get(mode, 0))
+            mix_passes[mode] = res[-1]
             if mode not in mix_best or res[0] < mix_best[mode][0]:
                 mix_best[mode] = res
             mix_outputs[mode] = res[4]
             eng.reset()
     for mode in mix_engines:
-        wall, dec_tokens, tokens, dispatches, _ = mix_best[mode]
+        wall, dec_tokens, tokens, dispatches, _, n = mix_best[mode]
         mixed[mode] = {
             "decode_tok_s": round(dec_tokens / wall, 1),
             "tok_s": round(tokens / wall, 1),
             "wall_s": round(wall, 4),
             "tokens": tokens,
             "dispatches": dispatches,
+            "timed_passes": n,
         }
     mix_ratio = mixed["chunked"]["decode_tok_s"] / \
         mixed["stall"]["decode_tok_s"]
@@ -656,6 +748,7 @@ def _sweep_mixed(cfg, model, params, out, rows) -> None:
         "megastep_k": MIX_K, "slots": SLOTS,
         "arrivals": "seeded poisson-ish, gap 0-1 steps, "
                     "prompts 3-13 tokens",
+        "min_timed_s": MIN_TIMED_S,
         **{mode: mixed[mode] for mode in ("stall", "chunked")},
         "chunked_over_stall_decode": round(mix_ratio, 2),
         "greedy_equiv_chunked_stall": mix_equiv,
@@ -713,13 +806,24 @@ def _sweep_async(cfg, model, params, out, rows) -> None:
                         megastep_unroll=True, donate_carries=False)
     _async_pass(eng)                     # untimed pass pays compilation
     eng.reset()
+
+    def _one():
+        r = _async_pass(eng)
+        return (r["decode_wall_s"], r["drain_wait_s"], r["megasteps"],
+                r["dec_tokens"], r["outputs"])
+
     best = {d: None for d in ASYNC_DEPTHS}
     outputs = {}
+    depth_passes = {}
     for _ in range(ASYNC_REPS):          # interleave reps across depths
         for d in ASYNC_DEPTHS:           # so load hits all alike
             eng.pipeline_depth = d
-            res = _async_pass(eng)
-            outputs[d] = res.pop("outputs")
+            dec, drain, megasteps, dec_tokens, outs, n = \
+                _timed_region(_one, 0, passes=depth_passes.get(d, 0))
+            depth_passes[d] = n
+            res = {"decode_wall_s": dec, "drain_wait_s": drain,
+                   "megasteps": megasteps, "dec_tokens": dec_tokens}
+            outputs[d] = outs
             if best[d] is None or \
                     res["decode_wall_s"] < best[d]["decode_wall_s"]:
                 best[d] = res
@@ -749,6 +853,7 @@ def _sweep_async(cfg, model, params, out, rows) -> None:
             "host_gap_us_per_megastep": round(gap_us, 1),
             "drain_wait_us_per_megastep": round(
                 b["drain_wait_s"] / m * 1e6, 1),
+            "timed_passes": depth_passes[d],
         }
     d_hi = ASYNC_DEPTHS[-1]
     gap1 = depths["depth1"]["host_gap_us_per_megastep"]
@@ -773,7 +878,7 @@ def _sweep_async(cfg, model, params, out, rows) -> None:
         "requests": ASYNC_REQUESTS, "max_new": ASYNC_MAX_NEW,
         "megastep_k": ASYNC_K, "slots": SLOTS,
         "sampling": "greedy", "admission": "chunked",
-        "donate_carries": False,
+        "donate_carries": False, "min_timed_s": MIN_TIMED_S,
         "note": "K=1 is the per-token-dispatch regime this sweep "
                 "pipelines; donation is off because chained-carry "
                 "donation serializes dispatch on this backend, and at "
@@ -792,7 +897,228 @@ def _sweep_async(cfg, model, params, out, rows) -> None:
         f"decode {ratio:.2f}x; greedy token-identical: {equiv}"))
 
 
-_SWEEPS = ("megastep", "mixed", "precision", "kv", "kernels", "async")
+def _paging_requests(cfg, n: int, seed: int = 17, prefix_len: int = 0):
+    rng = np.random.default_rng(seed)
+    prefix = (rng.integers(1, cfg.vocab_size,
+                           size=prefix_len).astype(np.int32)
+              if prefix_len else None)
+    reqs = []
+    for i in range(n):
+        plen = int(rng.integers(*PAGING_PROMPT_RANGE))
+        tail = rng.integers(1, cfg.vocab_size,
+                            size=plen).astype(np.int32)
+        prompt = np.concatenate([prefix, tail]) if prefix_len else tail
+        reqs.append(Request(uid=i, prompt=prompt,
+                            max_new_tokens=PAGING_MAX_NEW))
+    return reqs
+
+
+def _paging_pass(engine, cfg, n: int, prefix_len: int = 0):
+    """One timed pass. Returns (decode wall, decode tokens, total
+    tokens, outputs) — the _kv_pass shape."""
+    reqs = _paging_requests(cfg, n, prefix_len=prefix_len)
+    for r in reqs:
+        engine.submit(r)
+    st = engine.stats
+    base = (st.decode_wall_s, st.tokens_generated, st.prefills)
+    engine.run()
+    tokens = st.tokens_generated - base[1]
+    dec_tokens = tokens - (st.prefills - base[2])
+    return (st.decode_wall_s - base[0], dec_tokens, tokens,
+            [r.output for r in reqs])
+
+
+def _paging_peak(engine, cfg, n: int):
+    """Untimed step-driven pass sampling the pool's peak in-use
+    blocks — the live-token footprint the dense layout can't shrink
+    below its prealloc."""
+    for r in _paging_requests(cfg, n):
+        engine.submit(r)
+    peak = 0
+    while engine.has_work():
+        engine.step()
+        peak = max(peak, engine.blocks_in_use)
+    return peak
+
+
+def _paged_block_nbytes(engine) -> int:
+    """Device bytes of one pool block (all layers, K+V payload +
+    scale leaves)."""
+    lay = engine.cache["layers"]
+    return sum(lay[name].size * lay[name].dtype.itemsize
+               // engine.cache_blocks
+               for name in ("k", "v", "k_scale", "v_scale")
+               if name in lay)
+
+
+def _sweep_paging(cfg, model, params, out, rows) -> None:
+    """Dense vs paged KV cache through the engine: token identity,
+    the gather tax, cache bytes scaling with live tokens, and the
+    shared-prefix copy-on-write admission win."""
+    # pool sized to the workload's worst case, not slots x max_pages:
+    # the allocated-bytes win over the dense prealloc is the point
+    need = PAGING_PROMPT_RANGE[1] - 1 + PAGING_MAX_NEW
+    blocks = {p: SLOTS * -(-need // p) + 1 for p in PAGE_SIZES}
+    engines = {0: ServingEngine(model, params, slots=SLOTS,
+                                max_len=PAGING_MAX_LEN,
+                                sampling=SamplingConfig(),  # greedy
+                                megastep_k=MIX_K, admission="chunked",
+                                megastep_unroll=True)}
+    for p in PAGE_SIZES:
+        engines[p] = ServingEngine(model, params, slots=SLOTS,
+                                   max_len=PAGING_MAX_LEN,
+                                   sampling=SamplingConfig(),
+                                   megastep_k=MIX_K,
+                                   admission="chunked",
+                                   megastep_unroll=True, page_size=p,
+                                   cache_blocks=blocks[p])
+    n_req = PAGING_LOADS[-1]
+    best_dec = {key: float("inf") for key in engines}
+    tokens, dec_tokens, outputs, n_passes = {}, {}, {}, {}
+    for key, eng in engines.items():             # untimed: compilation
+        _paging_pass(eng, cfg, n_req)
+        eng.reset()
+    for _ in range(PAGING_REPS):                 # interleave reps so
+        for key, eng in engines.items():         # load hits all alike
+            dec_dt, dec_tokens[key], tokens[key], outputs[key], n = \
+                _timed_region(
+                    lambda e=eng: _paging_pass(e, cfg, n_req), 0,
+                    passes=n_passes.get(key, 0))
+            n_passes[key] = n
+            best_dec[key] = min(best_dec[key], dec_dt)
+            eng.reset()
+
+    dense_bytes = engines[0].cache_nbytes()
+    dense_tok_s = dec_tokens[0] / best_dec[0]
+    paged: Dict[str, Dict] = {}
+    for p in PAGE_SIZES:
+        paged[f"p{p}"] = {
+            "decode_tok_s": round(dec_tokens[p] / best_dec[p], 1),
+            "decode_wall_s": round(best_dec[p], 4),
+            "tokens": tokens[p],
+            "timed_passes": n_passes[p],
+            "cache_bytes": engines[p].cache_nbytes(),
+            "cache_blocks": blocks[p],
+            # paging moves bytes, never tokens (the tentpole contract,
+            # reference-pinned across archs in the property suite)
+            "greedy_equiv_dense": outputs[p] == outputs[0],
+        }
+
+    # cache bytes vs live tokens: peak in-use pool blocks across
+    # growing loads (the dense prealloc never moves)
+    p0 = PAGE_SIZES[0]
+    eng = engines[p0]
+    block_b = _paged_block_nbytes(eng)
+    fixed_b = eng.cache_nbytes() - block_b * eng.cache_blocks
+    scaling = {}
+    for load in PAGING_LOADS:
+        eng.reset()
+        peak = _paging_peak(eng, cfg, load)
+        scaling[f"requests_{load}"] = {
+            "peak_blocks": peak,
+            "peak_live_tokens_ub": peak * p0,
+            "peak_cache_bytes": peak * block_b + fixed_b,
+        }
+    eng.reset()
+
+    # shared-prefix copy-on-write: every request opens with the same
+    # system prompt; hits map its pages into the new slot's table and
+    # the riders for those tokens vanish from admission
+    pfx = ServingEngine(model, params, slots=SLOTS,
+                        max_len=PAGING_MAX_LEN,
+                        sampling=SamplingConfig(), megastep_k=MIX_K,
+                        admission="chunked", megastep_unroll=True,
+                        page_size=p0, prefix_cache=True)
+    _paging_pass(pfx, cfg, PAGING_PREFIX_REQUESTS,
+                 prefix_len=PAGING_PREFIX_LEN)   # untimed: compilation
+    pfx.reset()
+    h0 = (pfx.stats.prefix_hits, pfx.stats.prefix_hit_tokens)
+    pfx_dec, pfx_dec_tokens, _pt, pfx_out, pfx_n = _timed_region(
+        lambda: _paging_pass(pfx, cfg, PAGING_PREFIX_REQUESTS,
+                             prefix_len=PAGING_PREFIX_LEN), 0)
+    hits = pfx.stats.prefix_hits - h0[0]
+    hit_tokens = pfx.stats.prefix_hit_tokens - h0[1]
+    dense_out = _paging_pass(engines[0], cfg, PAGING_PREFIX_REQUESTS,
+                             prefix_len=PAGING_PREFIX_LEN)[-1]
+    prefix = {
+        "prefix_len": PAGING_PREFIX_LEN,
+        "requests": PAGING_PREFIX_REQUESTS,
+        "page_size": p0,
+        "decode_tok_s": round(pfx_dec_tokens / pfx_dec, 1),
+        "decode_wall_s": round(pfx_dec, 4),
+        "timed_passes": pfx_n,
+        "prefix_hits": hits,
+        "prefix_hit_tokens": hit_tokens,
+        # each cached-prefix token is one rider substep the chunked
+        # admission no longer spends
+        "admission_substeps_saved": hit_tokens,
+        "greedy_equiv_dense": pfx_out == dense_out,
+    }
+
+    # analytic twin at the paper's 2-thread A17 point, with and
+    # without prefix reuse
+    from repro.core import a17_cpu
+    from repro.core.scheduler import simulate_paging
+    mean_prompt = sum(PAGING_PROMPT_RANGE) // 2 + PAGING_PREFIX_LEN
+    analytic = {}
+    for tag, hit in (("hit0", 0.0), ("hit0.75", 0.75)):
+        sim = simulate_paging(cfg, a17_cpu(2), slots=SLOTS, k=MIX_K,
+                              prompt_len=mean_prompt,
+                              max_new=PAGING_MAX_NEW,
+                              kv_len=PAGING_MAX_LEN,
+                              page_sizes=PAGE_SIZES, hit_rate=hit)
+        analytic[tag] = {
+            ("dense" if p == 0 else f"p{p}"): {
+                "tok_s": round(r["step"].tokens_per_s, 1),
+                "pool_bytes": round(r["pool_bytes"]),
+                "rider_substeps_saved": round(
+                    r["rider_substeps_saved"], 1)}
+            for p, r in sim.items()}
+
+    out["paging"] = {
+        "requests": n_req, "max_new": PAGING_MAX_NEW,
+        "max_len": PAGING_MAX_LEN, "megastep_k": MIX_K,
+        "slots": SLOTS, "sampling": "greedy", "admission": "chunked",
+        "min_timed_s": MIN_TIMED_S,
+        "page_sizes": list(PAGE_SIZES),
+        "dense": {
+            "decode_tok_s": round(dense_tok_s, 1),
+            "decode_wall_s": round(best_dec[0], 4),
+            "tokens": tokens[0],
+            "timed_passes": n_passes[0],
+            "cache_bytes": dense_bytes,
+        },
+        "paged": paged,
+        "bytes_vs_live_tokens": {
+            "page_size": p0,
+            "block_bytes": block_b,
+            "dense_cache_bytes": dense_bytes,
+            **scaling,
+        },
+        "prefix_cache": prefix,
+        "analytic_a17_2t": analytic,
+    }
+    p8 = paged[f"p{p0}"]
+    ratio = p8["decode_tok_s"] / round(dense_tok_s, 1)
+    peak_hi = scaling[f"requests_{PAGING_LOADS[-1]}"]["peak_cache_bytes"]
+    peak_lo = scaling[f"requests_{PAGING_LOADS[0]}"]["peak_cache_bytes"]
+    rows.append((
+        "serving/paging_p%d_over_dense" % p0, ratio * 100,
+        f"paged p{p0} {p8['decode_tok_s']:.0f} vs dense "
+        f"{dense_tok_s:.0f} decode tok/s (= {ratio:.2f}x gather tax); "
+        f"token-identical: {p8['greedy_equiv_dense']}; allocated "
+        f"{p8['cache_bytes']} vs dense {dense_bytes} bytes"))
+    rows.append((
+        "serving/paging_bytes_scaling", peak_hi / max(peak_lo, 1) * 100,
+        f"peak live cache bytes {peak_lo} -> {peak_hi} as load "
+        f"{PAGING_LOADS[0]} -> {PAGING_LOADS[-1]} requests (dense "
+        f"fixed at {dense_bytes}); prefix cache: {hits} hits / "
+        f"{hit_tokens} prompt tokens skipped, token-identical: "
+        f"{prefix['greedy_equiv_dense']}"))
+
+
+_SWEEPS = ("megastep", "mixed", "precision", "kv", "kernels", "async",
+           "paging")
 
 
 def run(sweeps: Sequence[str] = _SWEEPS) -> List[Tuple[str, float, str]]:
@@ -815,6 +1141,8 @@ def run(sweeps: Sequence[str] = _SWEEPS) -> List[Tuple[str, float, str]]:
         _sweep_kernels(cfg, model, params, out, rows)
     if "async" in sweeps:
         _sweep_async(cfg, model, params, out, rows)
+    if "paging" in sweeps:
+        _sweep_paging(cfg, model, params, out, rows)
     path.write_text(json.dumps(out, indent=2) + "\n")
     rows.append(("serving/bench_json", 0.0,
                  f"wrote {path.name} sections: {', '.join(sweeps)}"))

@@ -64,6 +64,22 @@ def main() -> None:
                          "scales per ring-buffer position (the decode "
                          "stream that grows with context; no-op for "
                          "recurrent families)")
+    # When does paging pay? When requests share prompt prefixes (a
+    # system prompt, few-shot examples): the prefix cache maps the
+    # shared pages into every hitting slot and skips re-prefilling
+    # them. And when the dense slots*max_len prealloc overshoots what
+    # is actually live: the pool only holds pages in use. It costs a
+    # per-step block-table gather, so for short-context streams with
+    # no reuse, dense (--page-size 0) is the right default —
+    # dispatch.plan(prefix_hit_rate=...) makes the same call from the
+    # analytic twin (scheduler.simulate_paging).
+    ap.add_argument("--page-size", type=int, default=0,
+                    help="KV-cache page size in tokens; 0 = dense "
+                         "(see note above on when paging pays)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="share prompt-prefix pages across requests "
+                         "(the example stream reuses a common prefix "
+                         "so hits actually occur)")
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--requests", type=int, default=12)
     ap.add_argument("--max-new", type=int, default=24)
@@ -94,10 +110,20 @@ def main() -> None:
                            sampling=SamplingConfig(temperature=0.7,
                                                    top_k=40),
                            quant_policy=args.quant,
-                           kv_quant=args.kv_quant)
+                           kv_quant=args.kv_quant,
+                           page_size=args.page_size,
+                           prefix_cache=args.prefix_cache)
     rng = np.random.default_rng(0)
-    prompts = [rng.integers(1, cfg.vocab_size,
-                            size=5 + i % 4).astype(np.int32)
+    # with --prefix-cache, every request opens with the same "system
+    # prompt" so the shared pages actually hit; tails stay unique
+    shared = (rng.integers(1, cfg.vocab_size, size=2 * args.page_size
+                           + 1).astype(np.int32)
+              if args.prefix_cache and args.page_size else
+              np.zeros(0, np.int32))
+    prompts = [np.concatenate([
+                   shared,
+                   rng.integers(1, cfg.vocab_size,
+                                size=5 + i % 4).astype(np.int32)])
                for i in range(args.requests)]
 
     t0 = time.time()
@@ -141,6 +167,11 @@ def main() -> None:
           f"{engine.stats.tokens_generated} tokens in {dt:.1f}s "
           f"({engine.stats.tokens_generated / dt:.1f} tok/s, "
           f"{engine.stats.steps} batched decode steps)")
+    if engine.page_size:
+        print(f"paging: {engine.cache_blocks} blocks x "
+              f"{engine.page_size} tokens, {engine.stats.prefix_hits} "
+              f"prefix hits ({engine.stats.prefix_hit_tokens} prompt "
+              f"tokens skipped)")
     print("sample:", reqs[0].output[:12])
 
 

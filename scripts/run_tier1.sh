@@ -1,11 +1,11 @@
 #!/usr/bin/env bash
 # Tier-1 verification wrapper: the pytest suite with a pinned
 # hypothesis seed/profile so runs are deterministic in CI — followed
-# by seeded q4_0 weight-quant and q8_0 kv-cache serving smokes and a
+# by seeded q4_0 weight-quant, q8_0 kv-cache, async front-end and
+# paged-serving (prefix-hit admission + cancel-recycle) smokes, and a
 # schema check of the committed BENCH_serving.json (the precision,
-# kv_precision and kernel_backend sections must be present:
-# benchmarks/serving_bench.py --sweep precision|kv|kernels writes
-# them).
+# kv_precision, kernel_backend, async_overlap and paging sections must
+# be present: benchmarks/serving_bench.py --sweep ... writes them).
 #
 # By default the *fast* tier runs: pytest.ini excludes tests marked
 # `slow` (the cross-arch serving property sweeps that push the full
@@ -153,6 +153,65 @@ print(f"[tier1] async-serve smoke OK: 1 deadline expiry + 1 "
       f"survivor token-identical to reference")
 EOF
 
+echo "[tier1] paged-serving smoke (prefix-hit admission + cancel-recycle)"
+python - <<'EOF'
+import jax, numpy as np
+from repro.configs import get_config, reduced
+from repro.models import Model
+from repro.serving import Request, ServingEngine
+
+cfg = reduced(get_config("deepseek-7b"), d_model=64, d_ff=128,
+              vocab_size=256, num_heads=2, num_kv_heads=1)
+m = Model(cfg)
+params = m.init(jax.random.PRNGKey(0))
+rng = np.random.default_rng(2)
+shared = rng.integers(1, cfg.vocab_size, size=17).astype(np.int32)
+prompts = [np.concatenate([shared, rng.integers(
+               1, cfg.vocab_size, size=3 + i).astype(np.int32)])
+           for i in range(5)]
+
+def serve(page, prefix):
+    eng = ServingEngine(m, params, slots=2, max_len=64, megastep_k=4,
+                        admission="chunked", prefill_chunk=16,
+                        page_size=page, prefix_cache=prefix)
+    reqs = [Request(uid=i, prompt=p, max_new_tokens=6)
+            for i, p in enumerate(prompts)]
+    for r in reqs:
+        eng.submit(r)
+    eng.run()
+    return eng, [r.output for r in reqs]
+
+dense_eng, dense_out = serve(0, False)
+eng, paged_out = serve(8, True)
+assert paged_out == dense_out, "paged+prefix tokens diverged from dense"
+hits = eng.stats.prefix_hits
+assert hits >= 1, "no prefix-hit admission occurred"
+assert eng.stats.prefix_hit_tokens >= 8, eng.stats.prefix_hit_tokens
+# only the registry's own references survive the drain
+assert eng.blocks_in_use == len(eng._prefix_reg) > 0, \
+    (eng.blocks_in_use, len(eng._prefix_reg))
+
+# cancel-recycle: retire a mid-decode slot and confirm its private
+# blocks return to the free list while shared prefix pages stay live
+eng.reset()
+a = Request(uid=10, prompt=prompts[0], max_new_tokens=24)
+b = Request(uid=11, prompt=prompts[1], max_new_tokens=6)
+eng.submit(a)
+eng.submit(b)
+while not a.output and not a.done:
+    eng.step()
+live_mid = eng.blocks_in_use
+assert eng.cancel(a)
+assert eng.blocks_in_use < live_mid, "cancel freed no blocks"
+eng.run()
+assert b.output == dense_out[1], "cancel corrupted the neighbour slot"
+assert eng.blocks_in_use == len(eng._prefix_reg), \
+    "cancel leaked (or over-freed) cache blocks"
+print(f"[tier1] paged smoke OK: 5 requests token-identical to dense, "
+      f"{hits} prefix hit(s), cancel recycled blocks "
+      f"({eng.blocks_in_use} registry-held blocks live after drain)")
+EOF
+
 echo "[tier1] BENCH_serving.json schema check"
 python - <<'EOF'
 import json, pathlib
@@ -201,6 +260,33 @@ for fmt in ("q8_0", "q4_0"):
 assert kb["analytic_tpu_v5e_decode_32k"]["xla"]["kv_quant"] == "q8_0"
 assert kb["analytic_tpu_v5e_decode_32k"]["pallas"]["kv_quant"] == "q4_0"
 assert kb["q4_flip_predicted"] is True
+pg = bench["paging"]
+for key in ("page_sizes", "dense", "paged", "bytes_vs_live_tokens",
+            "prefix_cache", "analytic_a17_2t", "min_timed_s"):
+    assert key in pg, f"paging section missing key: {key}"
+assert pg["min_timed_s"] >= 0.15, pg["min_timed_s"]
+assert pg["dense"]["decode_tok_s"] > 0
+assert pg["dense"]["decode_wall_s"] >= pg["min_timed_s"], \
+    "paging dense timed region shorter than the floor"
+for p in pg["page_sizes"]:
+    row = pg["paged"][f"p{p}"]
+    assert row["decode_tok_s"] > 0 and row["cache_blocks"] > 0, p
+    assert row["decode_wall_s"] >= pg["min_timed_s"], \
+        f"paging p{p} timed region shorter than the floor"
+    # paged pool allocation stays under the dense prealloc
+    assert row["cache_bytes"] < pg["dense"]["cache_bytes"], p
+    assert row["greedy_equiv_dense"] is True, \
+        f"paging p{p}: tokens diverged from the dense cache"
+bl = pg["bytes_vs_live_tokens"]
+loads = sorted(int(k.split("_")[1]) for k in bl if k.startswith("requests_"))
+assert len(loads) >= 2, "need >=2 load points to show byte scaling"
+peaks = [bl[f"requests_{n}"]["peak_cache_bytes"] for n in loads]
+assert peaks[0] < peaks[-1] <= bl["dense_cache_bytes"], \
+    f"paged peak bytes must grow with live tokens under dense: {peaks}"
+pc = pg["prefix_cache"]
+assert pc["prefix_hits"] > 0 and pc["prefix_hit_tokens"] > 0
+assert pc["greedy_equiv_dense"] is True, \
+    "prefix cache: tokens diverged from the dense cache"
 ao = bench["async_overlap"]
 for key in ("depths", "host_gap_shrink", "greedy_equiv_depths",
             "analytic_a17_2t"):
@@ -216,5 +302,7 @@ assert ao["greedy_equiv_depths"] is True, \
     "async_overlap: pipelined greedy tokens diverged from depth 1"
 print("[tier1] BENCH_serving.json schema OK "
       f"(q4/bf16 @K8 decode = {prec['q4_over_bf16_k8_decode']}; "
-      f"kv q8/bf16 @K8 = {kv['q8_over_bf16_k8_decode']})")
+      f"kv q8/bf16 @K8 = {kv['q8_over_bf16_k8_decode']}; "
+      f"paged peak bytes {peaks[0]} -> {peaks[-1]} vs dense "
+      f"{bl['dense_cache_bytes']})")
 EOF

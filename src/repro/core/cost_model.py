@@ -232,6 +232,36 @@ def decode_carry_bytes(cfg, batch: int, kv_len: int,
                  * dtype_bytes)
 
 
+def paged_cache_bytes(live_tokens: float, page_size: int, *,
+                      bytes_per_token: float, active_slots: int = 1,
+                      max_pages: int = 0,
+                      table_entry_bytes: float = 4.0) -> float:
+    """Cache bytes held by a paged KV pool serving ``live_tokens``.
+
+    The dense engine preallocates ``slots x max_len`` rows whether or
+    not they hold live tokens; paging allocates fixed-size blocks on
+    demand, so the footprint tracks the live token count plus three
+    overheads the dense layout doesn't pay:
+
+    - internal fragmentation: each active slot's tail page is on
+      average half full (``0.5 * page_size`` rows per slot),
+    - the block tables (``active_slots x max_pages`` int32 entries),
+    - one reserved garbage block (retired/frozen rows are redirected
+      there so the scan can write unconditionally).
+
+    ``bytes_per_token`` is the full-model per-token KV footprint
+    (all layers, K+V, payload+scale at the serving cache precision) —
+    ``decode_carry_bytes(cfg, 1, 1) * stream_ratio`` for attention
+    families.
+    """
+    if page_size <= 0:
+        raise ValueError(f"page_size must be positive, got {page_size}")
+    pool = (live_tokens + 0.5 * page_size * active_slots
+            + page_size) * bytes_per_token
+    table = active_slots * max(max_pages, 1) * table_entry_bytes
+    return pool + table
+
+
 def quantized_per_token_s(per_token_s: float, hw: HardwareSpec,
                           weight_bytes: float = 0.0,
                           weight_format: str = "bf16",
@@ -287,7 +317,8 @@ def megastep_time(per_token_s: float, hw: HardwareSpec, k: int = 1, *,
                   kv_format: str = "bf16",
                   kernel_backend: str = "pallas",
                   host_drain_s: float = 0.0,
-                  pipeline_depth: int = 1) -> float:
+                  pipeline_depth: int = 1,
+                  page_gather_bytes: float = 0.0) -> float:
     """Wall time of one K-token serving megastep: one host dispatch +
     K device-resident decode iterations. The per-token dispatch share
     ``dispatch_overhead_s / k`` is the lever the paper's §5 CPU-vs-GPU
@@ -318,10 +349,22 @@ def megastep_time(per_token_s: float, hw: HardwareSpec, k: int = 1, *,
     stream — a quantized cache also shrinks the *carry* crossing the
     dispatch boundary, so pass a pre-scaled ``carry_bytes`` when the
     carry is the cache (``decode_carry_bytes(...) * stream_ratio``).
+
+    ``page_gather_bytes`` charges the paged-cache indirection tax per
+    token: the gather through the block table materializes a dense
+    view of the live cache before the attention kernel reads it (one
+    pool read + one dense write on top of the kernel's baseline read
+    stream) — pass ~2x the live cache-stream bytes, or 0 for the
+    dense layout. Paging trades this small bandwidth tax for a
+    footprint that scales with live tokens (see
+    :func:`paged_cache_bytes`) plus prefix-reuse admission savings.
     """
     per_token_s = quantized_per_token_s(per_token_s, hw, weight_bytes,
                                         weight_format, cache_bytes,
                                         kv_format, kernel_backend)
+    if page_gather_bytes:
+        per_token_s += page_gather_bytes / (hw.mem_bw
+                                            * hw.mem_efficiency)
     boundary = 0.0 if donate_carries else \
         carry_bytes / (hw.mem_bw * hw.mem_efficiency)
     device_s = boundary + k * per_token_s

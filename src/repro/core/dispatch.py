@@ -84,8 +84,25 @@ class ExecutionPlan:
     # Caveat measured on jax-0.4.37-CPU: depth >= 2 needs
     # donate_carries=False — donating a buffer that is itself a
     # pending megastep's output forces the jit call to execute inline,
-    # serializing the very dispatch chain pipelining relies on.
+    # serializing the very dispatch chain pipelining relies on. The
+    # planner enforces the pair: any plan with depth > 1 carries
+    # donate_carries=False (and ServingEngine warns + overrides if
+    # handed the pathological combination directly).
     pipeline_depth: int = 1
+    # paged KV cache: block size (tokens per page) of the slot->block-
+    # table indirection, 0 = dense per-slot cache. Emitted for decode
+    # shapes on full-attention families when scheduler.simulate_paging
+    # predicts paged throughput >= dense at the traffic's prefix hit
+    # rate — the gather tax is a pure cost at hit rate 0, so the knob
+    # stays 0 (dense) unless prefix reuse or the memory-footprint win
+    # (cache bytes scale with live tokens, not slots x max_len) pays
+    # for it. Always 0 for recurrent/windowed families, where the
+    # engine's paging_effective contract makes paging a structural
+    # no-op. Paging itself is bit-exact (greedy token-identical,
+    # pinned by the property suite) so the quality floor never vetoes
+    # it directly; it composes with kv_quant, whose quality_floor_bits
+    # veto above still applies to the pages' payload precision.
+    page_size: int = 0
     # Which dequant execution the plan was priced against: "pallas"
     # (fused in-register dequant — quant_matmul + the quantized decode-
     # attention kernel) or "xla" (materialized bf16 unpack before the
@@ -119,6 +136,7 @@ class ExecutionPlan:
                  f"admission={self.admission} "
                  f"depth={self.pipeline_depth} "
                  f"donate={self.donate_carries} "
+                 f"page_size={self.page_size} "
                  f"quant={self.quant_policy} "
                  f"kv_quant={self.kv_quant} "
                  f"kernels={self.kernel_backend}"]
@@ -137,7 +155,8 @@ def plan(cfg: ModelConfig, shape: InputShape,
          arrival_rate_per_s: float = 0.0,
          avg_prompt_len: int = 0,
          max_new: int = 32,
-         kernel_backend: str = "pallas") -> ExecutionPlan:
+         kernel_backend: str = "pallas",
+         prefix_hit_rate: float = 0.0) -> ExecutionPlan:
     """Derive the execution plan for (arch, input shape, hardware).
 
     ``arrival_rate_per_s`` / ``avg_prompt_len`` / ``max_new`` describe
@@ -152,6 +171,13 @@ def plan(cfg: ModelConfig, shape: InputShape,
     ordering flip the fused kernels cause: on TPU-class bandwidth an
     "xla" plan picks q8_0 (the q4 unpack tax drowns the byte win)
     while the "pallas" plan picks q4_0.
+
+    ``prefix_hit_rate`` describes the traffic's shared-prefix rate
+    (fraction of admissions whose prompt head is already cached —
+    system prompts, few-shot headers). It feeds the page-size knob:
+    paging's gather tax is a pure cost at hit rate 0, so the plan
+    stays dense unless prefix reuse pays for the indirection (see
+    ``scheduler.simulate_paging``).
     """
     if kernel_backend not in ("pallas", "xla"):
         raise ValueError(f"kernel_backend must be 'pallas' or 'xla', "
@@ -204,6 +230,7 @@ def plan(cfg: ModelConfig, shape: InputShape,
     admission = "chunked"
     kv_quant = "bf16"
     pipeline_depth = 1
+    page_size = 0
     if shape.kind == "decode":
         step_s = cm.graph_time_wave(g, hw)
         megastep_k = choose_megastep_k(hw, step_s,
@@ -215,6 +242,7 @@ def plan(cfg: ModelConfig, shape: InputShape,
         from repro.core.scheduler import (simulate_admission,
                                           simulate_async_overlap,
                                           simulate_kv_precision,
+                                          simulate_paging,
                                           simulate_precision)
         adm = simulate_admission(
             cfg, hw, k=megastep_k, batch=max(shape.global_batch, 1),
@@ -264,14 +292,39 @@ def plan(cfg: ModelConfig, shape: InputShape,
                     allowed_kv,
                     key=lambda f:
                         kv_sweep[f][kvl][megastep_k].tokens_per_s)
+        eff_win = (cfg.sliding_window
+                   or (cfg.window_long_ctx
+                       if max(shape.seq_len, 1) > cfg.max_full_attn
+                       else 0))
+        if cfg.arch_type not in ("ssm", "hybrid") and not eff_win:
+            # Page-size knob: sweep the paging model at this plan's
+            # traffic mix; emit the fastest page size, vetoed back to
+            # dense whenever it doesn't at least match the dense
+            # throughput (at hit rate 0 the gather tax always loses,
+            # so the plan pays for indirection only when prefix reuse
+            # does).
+            pg = simulate_paging(
+                cfg, hw, slots=max(shape.global_batch, 1),
+                k=megastep_k,
+                prompt_len=avg_prompt_len or max(shape.seq_len, 1),
+                max_new=max_new, kv_len=max(shape.seq_len, 1),
+                hit_rate=prefix_hit_rate, kv_quant=kv_quant,
+                kernel_backend=kernel_backend)
+            best_p = max(pg, key=lambda p: pg[p]["step"].tokens_per_s)
+            if best_p and (pg[best_p]["step"].tokens_per_s
+                           >= pg[0]["step"].tokens_per_s):
+                page_size = best_p
+    # depth >= 2 with donated carries serializes dispatch (the PR 6
+    # caveat documented on the field above) — the planner must never
+    # emit the pair.
     return ExecutionPlan(
         arch=cfg.name, shape=shape.name, hardware=hw.name,
         scheduler_version=version, fuse_qkv=True,
         fuse_gate_up=cfg.glu, decisions=decisions,
         megastep_k=megastep_k, admission=admission,
-        donate_carries=True, quant_policy=quant_policy,
+        donate_carries=(pipeline_depth < 2), quant_policy=quant_policy,
         kv_quant=kv_quant, pipeline_depth=pipeline_depth,
-        kernel_backend=kernel_backend)
+        kernel_backend=kernel_backend, page_size=page_size)
 
 
 def choose_megastep_k(hw: cm.HardwareSpec, step_s: float, *,

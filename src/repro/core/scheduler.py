@@ -396,6 +396,118 @@ def simulate_admission(cfg: ModelConfig,
     }
 
 
+def simulate_paging(cfg: ModelConfig,
+                    hw: Optional[cm.HardwareSpec] = None, *,
+                    threads: int = 4, slots: int = 4, k: int = 8,
+                    prompt_len: int = 32, max_new: int = 32,
+                    kv_len: int = 64,
+                    page_sizes: Sequence[int] = (8, 16, 32),
+                    hit_rate: float = 0.0,
+                    shared_fraction: float = 0.75,
+                    live_tokens: Optional[float] = None,
+                    weight_format: str = "f16",
+                    kv_quant: str = "bf16",
+                    donate_carries: bool = True,
+                    kernel_backend: str = "pallas",
+                    ) -> Dict[int, Dict]:
+    """Dense vs paged KV cache, analytically — the twin of
+    ``serving_bench --sweep paging`` and the model behind
+    ``dispatch.plan``'s page-size knob.
+
+    Three effects move per page size ``P``:
+
+    - **footprint**: the dense engine preallocates
+      ``slots x kv_len`` rows; the paged pool holds
+      ``live_tokens + slots x P/2`` rows (tail-page fragmentation)
+      plus table/garbage-block overhead
+      (:func:`cost_model.paged_cache_bytes`) — *this* is the term
+      that scales with live tokens instead of provisioned capacity.
+    - **gather tax**: every substep materializes a dense view of the
+      live cache through the block table (~2 extra passes over the
+      live cache stream), charged via ``megastep_time``'s
+      ``page_gather_bytes`` — grows with context, shrinks per-page-
+      size only via table locality (not modelled; P-independent).
+    - **prefix reuse**: under chunked admission a prefix hit maps
+      ``hit_rate x shared_fraction x prompt_len`` already-cached
+      tokens copy-on-write into the new slot's table, so those rider
+      substeps vanish from the turnover wall (the Xiao et al. mobile
+      traffic argument: bursty requests share system-prompt
+      prefixes). Sharable tokens round *down* to whole pages, so
+      small P captures more of the prefix.
+
+    Recurrent/windowed families serve dense state regardless
+    (``Model.paging_effective`` contract no-op) — every paged entry
+    degenerates to the dense result there.
+
+    Returns ``{page_size: {"step": VersionResult, "pool_bytes": ...,
+    "dense_bytes": ..., "bytes_per_live_token": ...,
+    "rider_substeps_saved": ...}}`` with page size 0 = the dense
+    baseline.
+    """
+    hw = hw or cm.a17_cpu(threads)
+    # mirror Model.paging_effective: recurrent state and windowed
+    # rings (explicit sliding_window or the long-context fallback)
+    # stay dense
+    win = (0 if cfg.arch_type in ("ssm", "hybrid")
+           else cfg.sliding_window
+           or (cfg.window_long_ctx if kv_len > cfg.max_full_attn
+               else 0))
+    noop = cfg.arch_type in ("ssm", "hybrid") or bool(win)
+    g = build_decoder_graph(cfg, seq=1, kv_len=kv_len, batch=slots,
+                            weight_format=weight_format, fused=True)
+    per_tok = cm.graph_time_wave(g, hw, overlap_efficiency=0.92) \
+        + _xla_unpack_penalty_s(g, weight_format, hw, kernel_backend)
+    eff_kv = "bf16" if noop else kv_quant
+    ratio = (1.0 if eff_kv in ("bf16", "f16", "f32")
+             else get_format(eff_kv).stream_ratio)
+    dense_bytes = cm.decode_carry_bytes(cfg, slots, kv_len) * ratio
+    bytes_per_token = dense_bytes / max(slots * kv_len, 1)
+    if live_tokens is None:
+        # steady state: each slot holds its prompt plus half its
+        # decode budget on average
+        live_tokens = slots * min(prompt_len + max_new / 2.0, kv_len)
+    dec_tokens = slots * max_new
+
+    out: Dict[int, Dict] = {}
+    for p in (0,) + tuple(page_sizes):
+        paged = bool(p) and not noop
+        gather = 2.0 * live_tokens * bytes_per_token / max(slots * k, 1) \
+            if paged else 0.0
+        substep = cm.megastep_time(
+            per_tok, hw, k, carry_bytes=dense_bytes,
+            donate_carries=donate_carries, kv_format=eff_kv,
+            cache_bytes=dense_bytes, kernel_backend=kernel_backend,
+            page_gather_bytes=gather) / k
+        # chunked turnover: prefix hits drop whole shared pages of
+        # rider substeps (floor to pages; >= 1 token always fed)
+        shared_tok = 0.0
+        if paged and hit_rate > 0.0:
+            pages = int(min(shared_fraction * prompt_len,
+                            prompt_len - 1) // p)
+            shared_tok = hit_rate * pages * p
+        wall = (prompt_len - shared_tok + max_new) * substep
+        pool = (cm.paged_cache_bytes(
+                    live_tokens, p, bytes_per_token=bytes_per_token,
+                    active_slots=slots, max_pages=-(-kv_len // p))
+                if paged else dense_bytes)
+        out[p] = {
+            "step": VersionResult(
+                f"paging_p{p}" if paged else "paging_dense", wall,
+                cm.tokens_per_second(wall, 1) * dec_tokens,
+                len(g.nodes),
+                (f"pool {pool/1e3:.1f}kB vs dense "
+                 f"{dense_bytes/1e3:.1f}kB; "
+                 f"{shared_tok:.1f} rider substeps saved/turnover"
+                 if paged else
+                 f"dense prealloc {dense_bytes/1e3:.1f}kB")),
+            "pool_bytes": pool,
+            "dense_bytes": dense_bytes,
+            "bytes_per_live_token": pool / max(live_tokens, 1.0),
+            "rider_substeps_saved": shared_tok,
+        }
+    return out
+
+
 def simulate_async_overlap(cfg: ModelConfig,
                            hw: Optional[cm.HardwareSpec] = None, *,
                            threads: int = 4, kv_len: int = 64,

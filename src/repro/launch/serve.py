@@ -259,6 +259,20 @@ def build_parser() -> argparse.ArgumentParser:
                     help="megasteps kept in flight: 1 = serial "
                          "dispatch/drain, 2 = double-buffered (drain N "
                          "overlaps device megastep N+1)")
+    # Paging pays when traffic shares prompt prefixes (the prefix
+    # cache skips re-prefilling shared pages) or when the dense
+    # slots*max_len prealloc overshoots live tokens; it costs a
+    # per-step gather of the block table, so leave it off for
+    # short-context, no-reuse streams. dispatch.plan's page_size knob
+    # (fed by scheduler.simulate_paging) makes the same call
+    # analytically.
+    ap.add_argument("--page-size", type=int, default=0,
+                    help="KV-cache page size in tokens; 0 = dense "
+                         "slot-major cache (no paging)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="reuse full prompt-prefix pages across "
+                         "requests via content hashing (requires "
+                         "--page-size > 0 and chunked admission)")
     ap.add_argument("--frontend", action="store_true",
                     help="route the synthetic stream through the "
                          "asyncio front-end (staggered arrivals, "
@@ -268,11 +282,15 @@ def build_parser() -> argparse.ArgumentParser:
     return ap
 
 
-def _make_requests(cfg, n: int, max_new: int) -> List[Request]:
+def _make_requests(cfg, n: int, max_new: int,
+                   shared_prefix: int = 0) -> List[Request]:
     rng = np.random.default_rng(0)
+    shared = rng.integers(1, cfg.vocab_size,
+                          size=shared_prefix).astype(np.int32)
     return [Request(uid=i,
-                    prompt=rng.integers(
-                        1, cfg.vocab_size, size=4 + i % 5).astype(np.int32),
+                    prompt=np.concatenate([shared, rng.integers(
+                        1, cfg.vocab_size,
+                        size=4 + i % 5).astype(np.int32)]),
                     max_new_tokens=max_new)
             for i in range(n)]
 
@@ -329,7 +347,9 @@ def main(argv: Optional[List[str]] = None) -> None:
                            prefill_chunk=args.prefill_chunk,
                            donate_carries=not args.no_donate,
                            kernels=args.kernels or None,
-                           pipeline_depth=args.pipeline_depth)
+                           pipeline_depth=args.pipeline_depth,
+                           page_size=args.page_size,
+                           prefix_cache=args.prefix_cache)
 
     # Warmup pays jit compile; reset() keeps the compiled executables
     # but zeroes the stats so the timed run is compile-excluded (the
@@ -347,7 +367,12 @@ def main(argv: Optional[List[str]] = None) -> None:
     if args.frontend:
         expired = _run_frontend(engine, cfg, args)
     else:
-        for r in _make_requests(cfg, args.requests, args.max_new):
+        # with --prefix-cache, open every prompt with the same "system
+        # prompt" (2 full pages + 1) so the shared pages actually hit
+        shared = (2 * args.page_size + 1
+                  if args.prefix_cache and args.page_size else 0)
+        for r in _make_requests(cfg, args.requests, args.max_new,
+                                shared_prefix=shared):
             engine.submit(r)
         engine.run()
     wall = time.perf_counter() - t0
@@ -360,7 +385,8 @@ def main(argv: Optional[List[str]] = None) -> None:
              f"{st.prefill_batches} prefill batches")
     print(f"arch={cfg.name} precision={args.precision} "
           f"kv_quant={engine.kv_quant} kernels={engine.kernels} "
-          f"admission={engine.admission} depth={engine.pipeline_depth}: "
+          f"admission={engine.admission} depth={engine.pipeline_depth} "
+          f"page_size={engine.page_size}: "
           f"{st.tokens_generated} tokens / {decode_s:.2f}s decode = "
           f"{st.tokens_generated / decode_s:.1f} tok/s "
           f"(warmup+compile {warmup_s:.1f}s excluded; run wall "
@@ -368,6 +394,11 @@ def main(argv: Optional[List[str]] = None) -> None:
           f"{st.megasteps} dispatches [K={engine.megastep_k}], "
           f"{st.prefills} prefills: {admit}; "
           f"drain-wait {st.drain_wait_s:.3f}s)")
+    if engine.page_size:
+        print(f"paging: {engine.cache_blocks} blocks x "
+              f"{engine.page_size} tokens, {engine.blocks_in_use} "
+              f"blocks live after drain, {st.prefix_hits} prefix "
+              f"hits ({st.prefix_hit_tokens} prompt tokens skipped)")
     if args.frontend:
         print(f"frontend: {args.requests - expired} completed, "
               f"{expired} deadline-expired, "

@@ -207,13 +207,19 @@ def attention_forward(p, cfg: ModelConfig, x: jax.Array, *,
 def attention_decode(p, cfg: ModelConfig, x: jax.Array, cache: Dict, *,
                      window: int = 0,
                      kv_override: Optional[Tuple] = None,
-                     use_rope: bool = True) -> Tuple[jax.Array, Dict]:
+                     use_rope: bool = True,
+                     write_mask: Optional[jax.Array] = None,
+                     ) -> Tuple[jax.Array, Dict]:
     """One-token decode with functional cache update.
 
     x: (B, 1, D); cache: {"k": (B,Hkv,S,hd), "v": ..., "lens": (B,)}.
     ``lens`` counts tokens already in the cache; the new token is
     written at slot ``lens % S`` (ring buffer when the cache is a
-    sliding window).
+    sliding window). Paged caches (``"block_table"`` present) route the
+    write through the slot's block table instead; ``write_mask`` (B,)
+    bool redirects non-advancing rows' writes to the reserved garbage
+    block — paged pools have no per-slot batch axis, so the frozen-write
+    select that protects dense caches cannot be applied after the fact.
     """
     B = x.shape[0]
     H, Hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
@@ -230,7 +236,9 @@ def attention_decode(p, cfg: ModelConfig, x: jax.Array, cache: Dict, *,
         return layers.linear(p["wo"], out, use_pallas=cfg.use_pallas), cache
 
     lens = cache["lens"]                          # (B,) int32
-    S_cache = cache["k"].shape[2]
+    paged = "block_table" in cache
+    S_cache = (cache["block_table"].shape[1] * cache["k"].shape[2]
+               if paged else cache["k"].shape[2])
     kv_quant = cfg.kv_quant if "k_scale" in cache else "bf16"
     pos = lens                                    # new token's position
     if use_rope:
@@ -252,7 +260,8 @@ def attention_decode(p, cfg: ModelConfig, x: jax.Array, cache: Dict, *,
     new_cache = dict(cache, lens=lens + 1)
     new_cache.update(kv_cache_write(cache, k, v, slot,
                                     kv_quant=kv_quant,
-                                    group=cfg.quant_group))
+                                    group=cfg.quant_group,
+                                    write_mask=write_mask))
     kv_len = jnp.minimum(lens + 1, S_cache)
     q = constrain(q, ("batch", "heads", None))
     if kv_quant in ("q8_0", "q4_0"):
@@ -260,10 +269,21 @@ def attention_decode(p, cfg: ModelConfig, x: jax.Array, cache: Dict, *,
         # to the kernel layer. Under kernels="pallas" the dequant runs
         # in-register inside the block loop (no per-token full-cache
         # unpack); the XLA fallback inside decode_attention_quant is
-        # computation-identical to the old kv_cache_read route.
+        # computation-identical to the old kv_cache_read route. Paged
+        # pools gather into the dense (B,Hkv,S,·) kernel-entry shape
+        # first — positions past kv_len hold garbage-block junk that
+        # the kernels' kpos < kv_len mask never reads.
+        if paged:
+            tbl = cache["block_table"]
+            k_q = paged_gather(new_cache["k"], tbl)
+            v_q = paged_gather(new_cache["v"], tbl)
+            k_s = paged_gather(new_cache["k_scale"], tbl)
+            v_s = paged_gather(new_cache["v_scale"], tbl)
+        else:
+            k_q, v_q = new_cache["k"], new_cache["v"]
+            k_s, v_s = new_cache["k_scale"], new_cache["v_scale"]
         out = ops.decode_attention_quant(
-            q, new_cache["k"], new_cache["k_scale"],
-            new_cache["v"], new_cache["v_scale"], kv_len=kv_len,
+            q, k_q, k_s, v_q, v_s, kv_len=kv_len,
             fmt=kv_quant, use_pallas=cfg.use_pallas)
     else:
         k_read, v_read = kv_cache_read(new_cache, kv_quant=kv_quant)
@@ -276,15 +296,48 @@ def attention_decode(p, cfg: ModelConfig, x: jax.Array, cache: Dict, *,
 
 def kv_cache_write(cache: Dict, k: jax.Array, v: jax.Array,
                    slot: jax.Array, *, kv_quant: str = "bf16",
-                   group: int = 32) -> Dict:
+                   group: int = 32,
+                   write_mask: Optional[jax.Array] = None) -> Dict:
     """Write one (B, Hkv, hd) K/V row at per-row ring ``slot`` (B,).
 
     Quantized caches (``kv_quant`` q8_0/q4_0) quantize the row at the
     write point — int8 payload into ``k``/``v``, per-(head, group)
     scales into the sibling ``k_scale``/``v_scale`` leaves — so the
     cache stream shrinks to bits/16 of its bf16 footprint. Returns the
-    updated leaves only (caller merges + advances ``lens``)."""
+    updated leaves only (caller merges + advances ``lens``).
+
+    Paged caches scatter through the slot's row of ``block_table``:
+    position ``slot`` lands in page ``slot // P`` at in-page offset
+    ``slot % P`` of the pool block that table entry names. Rows with
+    ``write_mask`` False are redirected to the reserved garbage block 0
+    (paged pools cannot be row-selected after the fact like dense
+    caches, so freezing must happen at the write point). Dense caches
+    ignore ``write_mask`` — the caller's post-write select handles it."""
     B = k.shape[0]
+    if "block_table" in cache:
+        P = cache["k"].shape[2]
+        bidx = jnp.arange(B)
+        blk = cache["block_table"][bidx, slot // P]
+        if write_mask is not None:
+            blk = jnp.where(write_mask, blk, 0)
+        off = slot % P
+        if kv_quant in ("bf16", "f16", "f32"):
+            return {
+                "k": cache["k"].at[blk, :, off].set(
+                    k.astype(cache["k"].dtype)),
+                "v": cache["v"].at[blk, :, off].set(
+                    v.astype(cache["v"].dtype)),
+            }
+        kq, ks = quantize_rows(k, kv_quant, group)
+        vq, vs = quantize_rows(v, kv_quant, group)
+        return {
+            "k": cache["k"].at[blk, :, off].set(kq),
+            "v": cache["v"].at[blk, :, off].set(vq),
+            "k_scale": cache["k_scale"].at[blk, :, off].set(
+                ks.astype(cache["k_scale"].dtype)),
+            "v_scale": cache["v_scale"].at[blk, :, off].set(
+                vs.astype(cache["v_scale"].dtype)),
+        }
     bidx = jnp.arange(B)
     if kv_quant in ("bf16", "f16", "f32"):
         return {
@@ -305,6 +358,18 @@ def kv_cache_write(cache: Dict, k: jax.Array, v: jax.Array,
     }
 
 
+def paged_gather(pool: jax.Array, table: jax.Array) -> jax.Array:
+    """Gather a block pool into its dense per-slot view.
+
+    pool: (num_blocks, Hkv, P, d); table: (B, n_pages) int32 →
+    (B, Hkv, n_pages * P, d). Unmapped table entries point at the
+    garbage block 0; callers mask those positions via kv_len."""
+    B, n_pages = table.shape
+    _, Hkv, P, d = pool.shape
+    g = pool[table]                       # (B, n_pages, Hkv, P, d)
+    return jnp.moveaxis(g, 1, 2).reshape(B, Hkv, n_pages * P, d)
+
+
 def kv_cache_read(cache: Dict, *, kv_quant: str = "bf16",
                   dtype=jnp.bfloat16) -> Tuple[jax.Array, jax.Array]:
     """The attention-visible (B, Hkv, S, hd) K/V view of a cache.
@@ -315,7 +380,19 @@ def kv_cache_read(cache: Dict, *, kv_quant: str = "bf16",
     ``attention_decode`` hands the raw leaves to
     ``ops.decode_attention_quant`` (in-VMEM dequant under
     kernels="pallas"); this helper remains for tests and offline
-    inspection of cache contents."""
+    inspection of cache contents. Paged caches gather their pools
+    through the block table first, so the returned view is
+    shape-identical to a dense cache's."""
+    if "block_table" in cache:
+        tbl = cache["block_table"]
+        k = paged_gather(cache["k"], tbl)
+        v = paged_gather(cache["v"], tbl)
+        if kv_quant in ("bf16", "f16", "f32"):
+            return k, v
+        return (dequantize_rows(k, paged_gather(cache["k_scale"], tbl),
+                                kv_quant, dtype),
+                dequantize_rows(v, paged_gather(cache["v_scale"], tbl),
+                                kv_quant, dtype))
     if kv_quant in ("bf16", "f16", "f32"):
         return cache["k"], cache["v"]
     return (dequantize_rows(cache["k"], cache["k_scale"], kv_quant, dtype),
@@ -324,24 +401,65 @@ def kv_cache_read(cache: Dict, *, kv_quant: str = "bf16",
 
 def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int,
                   window: int = 0, dtype=jnp.bfloat16,
-                  kv_quant: str = "bf16") -> Dict:
+                  kv_quant: str = "bf16", page_size: int = 0,
+                  num_blocks: int = 0) -> Dict:
     """Cache shapes; ``window`` > 0 caps the cache (ring buffer).
 
     ``kv_quant`` q8_0/q4_0 stores K/V as int8 payload (q4_0
     nibble-packed along head_dim) plus groupwise ``k_scale``/``v_scale``
     leaves — every leaf still carries batch on axis 0 and the ring
     position on axis 2, so the frozen-write mask, megastep donation and
-    prefill splicing treat them like any other cache leaf."""
+    prefill splicing treat them like any other cache leaf.
+
+    ``page_size`` > 0 pages the cache instead: K/V (and scale) leaves
+    become block *pools* of shape (num_blocks, Hkv, page_size, ·) with
+    no batch axis, and a per-slot ``block_table`` (batch, max_pages)
+    int32 leaf maps logical pages onto pool blocks. Block 0 is reserved
+    as the garbage block (frozen-row writes and unmapped table entries
+    land there); ``num_blocks`` defaults to one block per logical page
+    per slot plus the garbage block — capacity-equivalent to dense —
+    but can be set lower so total memory tracks live tokens. Paging
+    requires full attention (``window == 0``) and ``page_size`` dividing
+    the sequence capacity so the gathered view is shape-identical to a
+    dense cache."""
     S = min(max_len, window) if window else max_len
     Hkv, hd = cfg.num_kv_heads, cfg.head_dim
-    if kv_quant in ("bf16", "f16", "f32"):
+    quantized = kv_quant not in ("bf16", "f16", "f32")
+    if quantized:
+        g = kv_group_size(hd, cfg.quant_group, kv_quant)
+        pd = hd // 2 if kv_quant == "q4_0" else hd
+    if page_size:
+        if window:
+            raise ValueError(
+                "paged KV cache requires full attention (window == 0); "
+                f"got window={window}")
+        if S % page_size:
+            raise ValueError(
+                f"page_size {page_size} must divide the cache length {S}")
+        max_pages = S // page_size
+        n_blocks = num_blocks if num_blocks else batch * max_pages + 1
+        cache = {
+            "k": jnp.zeros((n_blocks, Hkv, page_size,
+                            pd if quantized else hd),
+                           jnp.int8 if quantized else dtype),
+            "v": jnp.zeros((n_blocks, Hkv, page_size,
+                            pd if quantized else hd),
+                           jnp.int8 if quantized else dtype),
+            "block_table": jnp.zeros((batch, max_pages), jnp.int32),
+            "lens": jnp.zeros((batch,), jnp.int32),
+        }
+        if quantized:
+            cache["k_scale"] = jnp.zeros(
+                (n_blocks, Hkv, page_size, hd // g), dtype)
+            cache["v_scale"] = jnp.zeros(
+                (n_blocks, Hkv, page_size, hd // g), dtype)
+        return cache
+    if not quantized:
         return {
             "k": jnp.zeros((batch, Hkv, S, hd), dtype),
             "v": jnp.zeros((batch, Hkv, S, hd), dtype),
             "lens": jnp.zeros((batch,), jnp.int32),
         }
-    g = kv_group_size(hd, cfg.quant_group, kv_quant)
-    pd = hd // 2 if kv_quant == "q4_0" else hd
     return {
         "k": jnp.zeros((batch, Hkv, S, pd), jnp.int8),
         "v": jnp.zeros((batch, Hkv, S, pd), jnp.int8),
@@ -351,7 +469,19 @@ def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int,
     }
 
 
-def kv_cache_axes(kv_quant: str = "bf16") -> Dict:
+def kv_cache_axes(kv_quant: str = "bf16", paged: bool = False) -> Dict:
+    if paged:
+        # pool leaves carry the block id on axis 0 — deliberately NOT
+        # "batch": splice/merge/freeze machinery keys on the "batch"
+        # axis name and must leave pools untouched.
+        pool = ("kv_block", None, "kv_page", None)
+        axes = {"k": pool, "v": pool,
+                "block_table": ("batch", None),
+                "lens": ("batch",)}
+        if kv_quant not in ("bf16", "f16", "f32"):
+            axes["k_scale"] = pool
+            axes["v_scale"] = pool
+        return axes
     axes = {"k": ("batch", None, "kv_seq", None),
             "v": ("batch", None, "kv_seq", None),
             "lens": ("batch",)}

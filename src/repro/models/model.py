@@ -313,11 +313,29 @@ class Model:
             return "bf16"
         return kvq
 
+    def paging_effective(self, max_len: int, page_size: int) -> int:
+        """Page size actually served, or 0 when the cache stays dense.
+
+        Paging virtualizes *growing* full-attention caches; recurrent
+        state (SSM / RG-LRU) is O(1) per slot and sliding-window rings
+        are already capped, so a paged engine on those families is
+        structurally dense — a contract no-op like ``kv_quant`` on
+        recurrent archs."""
+        if not page_size:
+            return 0
+        if self.cfg.arch_type not in ("dense", "moe", "vlm", "audio"):
+            return 0
+        if self.window_for(max_len):
+            return 0
+        return page_size
+
     def init_cache(self, batch: int, max_len: int, dtype=jnp.bfloat16,
-                   kv_quant: Optional[str] = None):
+                   kv_quant: Optional[str] = None, page_size: int = 0,
+                   cache_blocks: int = 0):
         cfg = self.cfg
         window = self.window_for(max_len)
         kvq = self.kv_quant_effective(kv_quant)
+        page_size = self.paging_effective(max_len, page_size)
         if cfg.arch_type == "ssm":
             one = lambda: ssm_mod.init_ssm_cache(cfg, batch, dtype)
             cache = {"layers": _stack_pytrees(
@@ -333,7 +351,9 @@ class Model:
             cache = {"layers": per_layer}
         else:
             one = lambda: attn.init_kv_cache(cfg, batch, max_len, window,
-                                             dtype, kv_quant=kvq)
+                                             dtype, kv_quant=kvq,
+                                             page_size=page_size,
+                                             num_blocks=cache_blocks)
             cache = {"layers": _stack_pytrees(
                 [one() for _ in range(cfg.num_layers)])}
             if cfg.arch_type == "audio":
@@ -346,7 +366,13 @@ class Model:
                 cache["cross_lens"] = jnp.zeros((batch,), jnp.int32)
         return cache
 
-    def cache_axes(self, kv_quant: Optional[str] = None):
+    def cache_axes(self, kv_quant: Optional[str] = None,
+                   page_size: int = 0):
+        """Logical axis names per cache leaf. Pass the *effective*
+        ``page_size`` (see ``paging_effective``) to describe a paged
+        cache — pool leaves then carry "kv_block"/"kv_page" instead of
+        "batch"/"kv_seq", which is what keeps the batch-keyed
+        splice/merge/freeze machinery off them."""
         cfg = self.cfg
         kvq = self.kv_quant_effective(kv_quant)
         if cfg.arch_type == "ssm":
@@ -361,7 +387,8 @@ class Model:
                            else attn.kv_cache_axes())
             return {"layers": out}
         axes = {"layers": jax.tree_util.tree_map(
-            lambda a: (None,) + a, attn.kv_cache_axes(kvq),
+            lambda a: (None,) + a,
+            attn.kv_cache_axes(kvq, paged=bool(page_size)),
             is_leaf=lambda x: isinstance(x, tuple))}
         if cfg.arch_type == "audio":
             axes["cross_k"] = (None, "batch", None, "kv_seq", None)
@@ -561,7 +588,8 @@ class Model:
                 else:
                     p_l, c_l = xs
                 z = layers.rmsnorm(h, p_l["attn_norm"], cfg.norm_eps)
-                z, c_new = attn.attention_decode(p_l["attn"], cfg, z, c_l)
+                z, c_new = attn.attention_decode(p_l["attn"], cfg, z, c_l,
+                                                 write_mask=advance_mask)
                 c_new = _freeze_rows(c_new, c_l, advance_mask)
                 h = h + z
                 if cross:
@@ -636,12 +664,24 @@ def _freeze_rows(c_new, c_old, mask):
     """Length-frozen cache write mask: batch rows where ``mask`` is
     False keep ``c_old``. Every per-layer cache leaf (k/v/lens, SSM
     conv/state, RG-LRU conv/state) carries batch on axis 0, so one
-    broadcast select covers all families."""
+    broadcast select covers all families.
+
+    Paged caches are the exception: pool leaves carry the block id on
+    axis 0, not batch, so a row select cannot undo a frozen row's
+    write. Those writes were instead redirected to the garbage block
+    inside ``attention_decode`` (via ``write_mask``); here only the
+    per-slot leaves (``lens``, ``block_table``) get the batch select."""
     if mask is None:
         return c_new
     def sel(n, o):
         m = mask.reshape((mask.shape[0],) + (1,) * (n.ndim - 1))
         return jnp.where(m, n, o)
+    if isinstance(c_new, dict) and "block_table" in c_new:
+        out = dict(c_new)
+        out["lens"] = sel(c_new["lens"], c_old["lens"])
+        out["block_table"] = sel(c_new["block_table"],
+                                 c_old["block_table"])
+        return out
     return jax.tree_util.tree_map(sel, c_new, c_old)
 
 

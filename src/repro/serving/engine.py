@@ -84,6 +84,7 @@ from __future__ import annotations
 import collections
 import dataclasses
 import time
+import warnings
 from typing import Any, Deque, Dict, List, Optional
 
 import jax
@@ -133,6 +134,9 @@ class EngineStats:
     inscan_admissions: int = 0   # requests admitted inside the megastep
     chunk_refills: int = 0       # prompt chunk buffers refreshed
     cancelled: int = 0           # requests retired via cancel()
+    prefix_hits: int = 0         # admissions that reused cached blocks
+    prefix_hit_tokens: int = 0   # prompt tokens skipped via shared pages
+    blocks_recycled: int = 0     # pool blocks returned to the free list
     decode_wall_s: float = 0.0   # wall time in megastep dispatch + drain
     # pipelining attribution: where the decode wall actually goes
     stage_wall_s: float = 0.0    # host time building admission arrays
@@ -194,7 +198,10 @@ class ServingEngine:
                  quant_policy: Optional[str] = None,
                  kv_quant: Optional[str] = None,
                  kernels: Optional[str] = None,
-                 pipeline_depth: int = 1):
+                 pipeline_depth: int = 1,
+                 page_size: int = 0,
+                 cache_blocks: Optional[int] = None,
+                 prefix_cache: bool = False):
         # Kernel backend is a serving dimension like kv_quant: one
         # switch lights up the whole fused-dequant Pallas path (the
         # quant_matmul decode GEMVs *and* the quantized-KV decode
@@ -290,6 +297,20 @@ class ServingEngine:
                 f"pipeline_depth must be >= 1 (got {pipeline_depth}); "
                 "1 is the serial loop, 2 keeps one megastep in flight")
         self.pipeline_depth = int(pipeline_depth)
+        # PR 6 measured this combination as pathological on jax-CPU:
+        # donating a still-pending computation's output buffer makes
+        # the next jit call run inline, serializing exactly the
+        # dispatch the pipelining exists to overlap. Warn + override
+        # rather than raise so planner-free callers still get a
+        # working (and faster) configuration.
+        if self.pipeline_depth > 1 and self.donate_carries:
+            warnings.warn(
+                "pipeline_depth>1 with donate_carries=True serializes "
+                "dispatch (donating a pending megastep's carry makes "
+                "the next dispatch run inline on this backend); "
+                "overriding donate_carries=False", RuntimeWarning,
+                stacklevel=2)
+            self.donate_carries = donate_carries = False
 
         self.queue: Deque[Request] = collections.deque()
 
@@ -297,6 +318,50 @@ class ServingEngine:
         self._pad_prefill = self.cfg.arch_type not in ("ssm", "hybrid")
         window = model.window_for(max_len)
         self._cache_seq = min(max_len, window) if window else max_len
+
+        # -- paged KV cache (block pool + per-slot block tables) ------
+        # ``page_size`` > 0 virtualizes full-attention caches: total
+        # cache memory is ``cache_blocks`` pool blocks (scaling with
+        # live tokens, not slots × max_len), slot retirement/cancel
+        # recycles blocks through a free list, and — with
+        # ``prefix_cache`` — admission maps a prompt's longest cached
+        # prefix into the new slot's table copy-on-write. Recurrent and
+        # sliding-window families stay structurally dense (a contract
+        # no-op, like kv_quant there).
+        if int(page_size) < 0:
+            raise ValueError(f"page_size must be >= 0 (got {page_size})")
+        self.page_size = int(page_size)
+        self._eff_page = model.paging_effective(max_len, self.page_size)
+        self.paged = bool(self._eff_page)
+        if self.paged and self._cache_seq % self._eff_page:
+            raise ValueError(
+                f"page_size {self._eff_page} must divide the cache "
+                f"length {self._cache_seq} so the gathered paged view "
+                "stays shape-identical to the dense cache")
+        self.max_pages = (self._cache_seq // self._eff_page
+                          if self.paged else 0)
+        if self.paged:
+            default_blocks = self.slots * self.max_pages + 1
+            self.cache_blocks = (int(cache_blocks) if cache_blocks
+                                 else default_blocks)
+            if self.cache_blocks < 2:
+                raise ValueError(
+                    f"cache_blocks must be >= 2 (got {cache_blocks}): "
+                    "block 0 is the reserved garbage block")
+        else:
+            self.cache_blocks = 0
+        # prefix reuse needs chunked admission: only then are a
+        # prompt's pages produced by the same compiled megastep every
+        # admission path runs, so shared pages are bit-identical to
+        # what a fresh prefill would write (the XLA-CPU one-ulp
+        # cross-regime caveat in ROADMAP standing notes).
+        self.prefix_cache_enabled = bool(
+            prefix_cache and self.paged and self.admission == "chunked")
+        if prefix_cache and not self.prefix_cache_enabled:
+            warnings.warn(
+                "prefix_cache requires a paged cache and chunked "
+                "admission; disabled for this engine", RuntimeWarning,
+                stacklevel=2)
 
         # donated carries: cache + SlotState are consumed by the
         # dispatch and updated in place (we immediately rebind both).
@@ -320,10 +385,28 @@ class ServingEngine:
         if rng is not None:
             self._init_rng = rng
         st_key = jax.random.split(self._init_rng)[1]
-        self.cache = self.model.init_cache(self.slots, self.max_len)
+        self.cache = self.model.init_cache(
+            self.slots, self.max_len, page_size=self.page_size,
+            cache_blocks=self.cache_blocks)
         self.state = _init_slot_state(self.slots, self.prefill_chunk,
                                       st_key)
         self.active: List[Optional[Request]] = [None] * self.slots
+        # block allocator (paged only): free list + refcounts. Block 0
+        # is the reserved garbage block (frozen-row writes land there)
+        # and is never handed out. ``_prefix_reg`` maps a prompt
+        # prefix's content key → pool block, LRU-ordered; the registry
+        # holds its own reference so a cached page survives its
+        # original request.
+        self._free: List[int] = (list(range(self.cache_blocks - 1, 0, -1))
+                                 if self.paged else [])
+        self._ref = (np.zeros((self.cache_blocks,), np.int64)
+                     if self.paged else None)
+        self._slot_blocks: List[List[int]] = [[] for _ in
+                                              range(self.slots)]
+        self._slot_shared: List[int] = [0] * self.slots
+        self._slot_reg_done: List[bool] = [False] * self.slots
+        self._prefix_reg: "collections.OrderedDict[bytes, int]" = \
+            collections.OrderedDict()
         # pipelined loop: (device block, slot-occupant snapshot) per
         # dispatched-but-undrained megastep, oldest first
         self._inflight: Deque = collections.deque()
@@ -343,6 +426,111 @@ class ServingEngine:
         return sum(l.size * l.dtype.itemsize
                    for l in jax.tree_util.tree_leaves(self.cache))
 
+    # -- block allocator (paged cache) -------------------------------------
+    @property
+    def blocks_in_use(self) -> int:
+        """Pool blocks currently referenced (excl. the garbage block)."""
+        if not self.paged:
+            return 0
+        return self.cache_blocks - 1 - len(self._free)
+
+    def _decref(self, blk: int) -> None:
+        self._ref[blk] -= 1
+        assert self._ref[blk] >= 0, f"block {blk} refcount underflow"
+        if self._ref[blk] == 0:
+            self._free.append(blk)
+            self.stats.blocks_recycled += 1
+
+    def _release_slot_blocks(self, s: int) -> None:
+        """Drop a retired/cancelled slot's references. Blocks shared
+        with the prefix registry (or another slot's table) survive —
+        only the refcount hitting zero recycles a block."""
+        for blk in self._slot_blocks[s]:
+            self._decref(blk)
+        self._slot_blocks[s] = []
+        self._slot_shared[s] = 0
+        self._slot_reg_done[s] = False
+
+    def _reserve_blocks(self, n: int) -> bool:
+        """Ensure ``n`` free blocks, evicting LRU prefix-registry
+        entries if needed (an evicted page still referenced by a live
+        slot is only unhooked from the registry, not recycled)."""
+        while len(self._free) < n and self._prefix_reg:
+            _, blk = self._prefix_reg.popitem(last=False)
+            self._decref(blk)
+        return len(self._free) >= n
+
+    def _admit_paged(self, s: int, req: Request) -> Optional[int]:
+        """Allocate the slot's block table for ``req``; returns the
+        admission start position (> 0 on a prefix hit: that many prompt
+        tokens are already cached in shared pages) or None when the
+        pool cannot supply enough blocks even after registry eviction
+        (the caller re-queues the request — FIFO blocking)."""
+        P = self._eff_page
+        prompt = np.asarray(req.prompt, np.int32)
+        need = min(len(prompt) + req.max_new_tokens, self._cache_seq)
+        n_pages = -(-need // P)
+        # a request that outgrows the cache wraps its ring cursor back
+        # over its own leading pages — those pages must be exclusively
+        # owned (no sharing in, no registration out)
+        wraps = len(prompt) + req.max_new_tokens > self._cache_seq
+        shared: List = []
+        if self.prefix_cache_enabled and not wraps:
+            # longest cached prefix, capped so >= 1 prompt token is
+            # left to feed (the scan emits the first sampled token the
+            # substep it consumes the last prompt token)
+            for i in range((len(prompt) - 1) // P):
+                key = prompt[:(i + 1) * P].tobytes()
+                blk = self._prefix_reg.get(key)
+                if blk is None:
+                    break
+                shared.append((key, blk))
+        if not self._reserve_blocks(n_pages - len(shared)):
+            return None
+        blocks = []
+        for key, blk in shared:
+            self._ref[blk] += 1
+            self._prefix_reg.move_to_end(key)
+            blocks.append(blk)
+        for _ in range(n_pages - len(shared)):
+            blk = self._free.pop()
+            self._ref[blk] = 1
+            blocks.append(blk)
+        self._slot_blocks[s] = blocks
+        self._slot_shared[s] = len(shared)
+        self._slot_reg_done[s] = wraps or not self.prefix_cache_enabled
+        start = len(shared) * P
+        if start:
+            self.stats.prefix_hits += 1
+            self.stats.prefix_hit_tokens += start
+        return start
+
+    def _register_prefix(self, s: int, req: Request) -> None:
+        """Publish the slot's fully-prefilled prompt pages into the
+        prefix registry (chunked admission only — see __init__). Runs
+        once per request, when the drained pos mirror shows the prompt
+        fully consumed, i.e. after the pages' contents exist on
+        device. Decode writes land at pos >= prompt_len, so published
+        pages are never written again by this slot (copy-on-write for
+        free)."""
+        self._slot_reg_done[s] = True
+        prompt = np.asarray(req.prompt, np.int32)
+        P = self._eff_page
+        blocks = self._slot_blocks[s]
+        for i in range(len(prompt) // P):
+            key = prompt[:(i + 1) * P].tobytes()
+            if key in self._prefix_reg:
+                self._prefix_reg.move_to_end(key)
+                continue
+            self._ref[blocks[i]] += 1       # the registry's reference
+            self._prefix_reg[key] = blocks[i]
+
+    def _slot_table_row(self, s: int) -> np.ndarray:
+        row = np.zeros((self.max_pages,), np.int32)
+        blocks = self._slot_blocks[s]
+        row[:len(blocks)] = blocks
+        return row
+
     # -- per-request sampling ----------------------------------------------
     def _req_sampling(self, req: Request):
         smp = self.sampling
@@ -353,11 +541,17 @@ class ServingEngine:
 
     # -- batched prefill into free slots (admission="stall") ---------------
     def _prefill_impl(self, params, tokens, seq_lens, cache, slot_idx,
-                      state, max_new, eos_id, temp, top_k, top_p):
+                      state, max_new, eos_id, temp, top_k, top_p,
+                      table_rows):
         """Prefill a length bucket (N, S) in one dispatch: splice its
         cache rows into the batch cache at ``slot_idx`` (N,), sample
         the first token in-jit, and refill the SlotState rows — the
-        whole refill is one dispatch and one (N,) host transfer."""
+        whole refill is one dispatch and one (N,) host transfer.
+
+        Paged engines prefill into a *dense* scratch cache (the model's
+        prefill path is structure-driven), then scatter its rows
+        page-wise into the pool blocks named by ``table_rows``
+        (N, max_pages) — dense engines ignore that argument."""
         n = tokens.shape[0]
         one = self.model.init_cache(n, self.max_len)
         batch = {"tokens": tokens, "seq_lens": seq_lens, **{
@@ -365,18 +559,23 @@ class ServingEngine:
                 if hasattr(v, "shape") else v)
             for k, v in self.extra.items()}}
         logits, one = self.model.prefill(params, batch, one)
-        axes = self.model.cache_axes()
+        if self.paged:
+            new_cache = self._paged_splice(cache, one, slot_idx,
+                                           table_rows)
+        else:
+            axes = self.model.cache_axes()
 
-        def splice(full, single, ax):
-            # the batch axis is named per cache leaf by cache_axes();
-            # never guess it from shapes (a leaf with slots==1 or a
-            # size-1 non-batch dim would silently mis-splice)
-            b = ax.index("batch")
-            out = jnp.moveaxis(full, b, 0).at[slot_idx].set(
-                jnp.moveaxis(single, b, 0).astype(full.dtype))
-            return jnp.moveaxis(out, 0, b)
+            def splice(full, single, ax):
+                # the batch axis is named per cache leaf by
+                # cache_axes(); never guess it from shapes (a leaf with
+                # slots==1 or a size-1 non-batch dim would silently
+                # mis-splice)
+                b = ax.index("batch")
+                out = jnp.moveaxis(full, b, 0).at[slot_idx].set(
+                    jnp.moveaxis(single, b, 0).astype(full.dtype))
+                return jnp.moveaxis(out, 0, b)
 
-        new_cache = jax.tree_util.tree_map(splice, cache, one, axes)
+            new_cache = jax.tree_util.tree_map(splice, cache, one, axes)
 
         rng, key = jax.random.split(state.rng)
         first = sample_batched(logits, key, temp, top_k, top_p)
@@ -398,6 +597,47 @@ class ServingEngine:
             top_p=state.top_p.at[slot_idx].set(top_p),
             rng=rng)
         return first, new_cache, new_state
+
+    def _paged_splice(self, cache, one, slot_idx, table_rows):
+        """Scatter a dense prefilled scratch cache into the paged live
+        cache: K/V (and scale) rows are cut into page_size chunks and
+        written to the pool blocks the admitted slots' tables name;
+        ``lens`` and ``block_table`` rows are spliced per slot. Pages
+        past a slot's allocation map to table entry 0 — the garbage
+        block — so over-long (length-bucketed) scratch rows land
+        harmlessly there."""
+        P = self._eff_page
+        live, scratch = cache["layers"], one["layers"]
+        out = dict(live)
+        S = scratch["k"].shape[3]
+        n_pages = min(-(-S // P), self.max_pages)
+        for name in ("k", "v", "k_scale", "v_scale"):
+            if name not in live:
+                continue
+            src = scratch[name].astype(live[name].dtype)
+            L, n, Hkv, _, d = src.shape
+            pad = n_pages * P - S
+            if pad > 0:
+                src = jnp.pad(src, ((0, 0), (0, 0), (0, 0), (0, pad),
+                                    (0, 0)))
+            elif pad < 0:
+                src = src[:, :, :, :n_pages * P]
+            src = src.reshape(L, n, Hkv, n_pages, P, d)
+            src = jnp.moveaxis(src, 3, 2)    # (L, n, n_pages, Hkv, P, d)
+            out[name] = live[name].at[:, table_rows[:, :n_pages]].set(src)
+        out["lens"] = live["lens"].at[:, slot_idx].set(
+            scratch["lens"].astype(live["lens"].dtype))
+        out["block_table"] = live["block_table"].at[:, slot_idx].set(
+            table_rows[None].astype(jnp.int32))
+        new_cache = dict(cache, layers=out)
+        for name in ("cross_k", "cross_v", "cross_lens"):
+            if name in cache:
+                b = 0 if name == "cross_lens" else 1
+                merged = jnp.moveaxis(cache[name], b, 0).at[slot_idx].set(
+                    jnp.moveaxis(one[name], b, 0).astype(
+                        cache[name].dtype))
+                new_cache[name] = jnp.moveaxis(merged, 0, b)
+        return new_cache
 
     def _bucket_len(self, prompt_len: int) -> int:
         """Padded bucket length: next power of two (≥8), capped at the
@@ -429,6 +669,16 @@ class ServingEngine:
         if req.max_new_tokens == 0:
             req.done = True          # nothing to generate: legal no-op
             return
+        if self.paged:
+            need = min(len(np.asarray(req.prompt)) + req.max_new_tokens,
+                       self._cache_seq)
+            pages = -(-need // self._eff_page)
+            if pages > self.cache_blocks - 1:
+                raise ValueError(
+                    f"request {req.uid}: needs {pages} cache pages but "
+                    f"the pool holds {self.cache_blocks - 1} — it can "
+                    "never be admitted (raise cache_blocks or shrink "
+                    "the request)")
         self.queue.append(req)
 
     def cancel(self, req: Request) -> bool:
@@ -455,6 +705,11 @@ class ServingEngine:
                     phase=self.state.phase.at[s].set(PHASE_IDLE))
                 self.active[s] = None
                 self._stochastic_slots.discard(s)
+                if self.paged:
+                    # recycle the slot's blocks; prefix pages shared
+                    # with the registry or another slot survive (their
+                    # refcount stays > 0)
+                    self._release_slot_blocks(s)
                 req.done = req.cancelled = True
                 self.stats.cancelled += 1
                 return True
@@ -483,6 +738,18 @@ class ServingEngine:
         """PR-1 admission: length-bucketed prefill dispatches that run
         between megasteps — and stall every decoding slot meanwhile."""
         taken = self._take_free()
+        if self.paged and taken:
+            # allocate block tables up front; a request the pool cannot
+            # serve goes back to the queue head (FIFO blocking — later
+            # requests must not jump an admission-starved head)
+            admitted, putback = [], []
+            for s, req in taken:
+                if putback or self._admit_paged(s, req) is None:
+                    putback.append(req)
+                else:
+                    admitted.append((s, req))
+            self.queue.extendleft(reversed(putback))
+            taken = admitted
         if not taken:
             return
         buckets: Dict[int, List] = {}
@@ -502,11 +769,15 @@ class ServingEngine:
             temp = np.asarray([v[0] for v in smp], np.float32)
             topk = np.asarray([v[1] for v in smp], np.int32)
             topp = np.asarray([v[2] for v in smp], np.float32)
+            rows = (np.stack([self._slot_table_row(s) for s, _ in group])
+                    if self.paged
+                    else np.zeros((len(group), 0), np.int32))
             first, self.cache, self.state = self._prefill(
                 self.params, jnp.asarray(toks), jnp.asarray(lens),
                 self.cache, jnp.asarray(slot_idx), self.state,
                 jnp.asarray(maxnew), jnp.asarray(eos),
-                jnp.asarray(temp), jnp.asarray(topk), jnp.asarray(topp))
+                jnp.asarray(temp), jnp.asarray(topk), jnp.asarray(topp),
+                jnp.asarray(rows))
             first = np.asarray(first)
             self.stats.prefill_batches += 1
 
@@ -519,6 +790,8 @@ class ServingEngine:
                 if tok == req.eos_id or len(req.output) >= \
                         req.max_new_tokens:
                     req.done = True       # first token already ends it
+                    if self.paged:
+                        self._release_slot_blocks(s)
                 else:
                     self.active[s] = req
                     if self._req_sampling(req)[0] > 0.0:
@@ -526,16 +799,23 @@ class ServingEngine:
 
     def _empty_admit(self) -> Dict[str, np.ndarray]:
         n, c = self.slots, self.prefill_chunk
-        return {"new": np.zeros((n,), bool),
-                "refill": np.zeros((n,), bool),
-                "tokens": np.zeros((n, c), np.int32),
-                "base": np.zeros((n,), np.int32),
-                "prompt_len": np.zeros((n,), np.int32),
-                "max_new": np.zeros((n,), np.int32),
-                "eos": np.full((n,), -1, np.int32),
-                "temp": np.zeros((n,), np.float32),
-                "top_k": np.zeros((n,), np.int32),
-                "top_p": np.ones((n,), np.float32)}
+        admit = {"new": np.zeros((n,), bool),
+                 "refill": np.zeros((n,), bool),
+                 "tokens": np.zeros((n, c), np.int32),
+                 "base": np.zeros((n,), np.int32),
+                 "prompt_len": np.zeros((n,), np.int32),
+                 "max_new": np.zeros((n,), np.int32),
+                 "eos": np.full((n,), -1, np.int32),
+                 "temp": np.zeros((n,), np.float32),
+                 "top_k": np.zeros((n,), np.int32),
+                 "top_p": np.ones((n,), np.float32)}
+        if self.paged:
+            # fresh slots' admission start (cached-prefix length) and
+            # block-table rows ride the same megastep arguments
+            admit["start_pos"] = np.zeros((n,), np.int32)
+            admit["block_table"] = np.zeros((n, self.max_pages),
+                                            np.int32)
+        return admit
 
     def _fill_slots_chunked(self) -> Dict[str, np.ndarray]:
         """Build the megastep's admission arguments: next prompt chunk
@@ -559,10 +839,23 @@ class ServingEngine:
             if pos > 0:
                 self.stats.chunk_refills += 1
         # admit fresh requests to free slots
+        putback: List[Request] = []
         for s, req in self._take_free():
+            start = 0
+            if self.paged:
+                if putback:
+                    putback.append(req)   # FIFO: stay behind the
+                    continue              # blocked head
+                res = self._admit_paged(s, req)
+                if res is None:           # pool exhausted: re-queue
+                    putback.append(req)
+                    continue
+                start = res
+                admit["start_pos"][s] = start
+                admit["block_table"][s] = self._slot_table_row(s)
             admit["new"][s] = True
-            admit["base"][s] = 0
-            seg = req.prompt[:chunk]
+            admit["base"][s] = start
+            seg = req.prompt[start:start + chunk]
             admit["tokens"][s, :len(seg)] = seg
             admit["prompt_len"][s] = len(req.prompt)
             admit["max_new"][s] = req.max_new_tokens
@@ -572,11 +865,13 @@ class ServingEngine:
             admit["top_k"][s] = topk
             admit["top_p"][s] = topp
             self.active[s] = req
-            self._prefill_pos[s] = 0
+            self._prefill_pos[s] = start
             if temp > 0.0:
                 self._stochastic_slots.add(s)
             self.stats.prefills += 1
             self.stats.inscan_admissions += 1
+        if putback:
+            self.queue.extendleft(reversed(putback))
         return admit
 
     def _fill_slots(self) -> Dict[str, np.ndarray]:
@@ -594,22 +889,41 @@ class ServingEngine:
         only swap the prompt window."""
         nm = jnp.asarray(admit["new"])
         anym = nm | jnp.asarray(admit["refill"])
-        axes = self.model.cache_axes()
+        axes = self.model.cache_axes(page_size=self._eff_page)
 
         def reset(leaf, ax):
+            if "batch" not in ax:
+                # paged pool leaves have no per-slot rows to zero;
+                # stale block contents past ``lens`` are never read
+                # (same contract as dense junk past lens)
+                return leaf
             b = ax.index("batch")
             m = nm.reshape(tuple(nm.shape[0] if i == b else 1
                                  for i in range(leaf.ndim)))
             return jnp.where(m, jnp.zeros((), leaf.dtype), leaf)
 
         cache = jax.tree_util.tree_map(reset, cache, axes)
+        if self.paged:
+            # fresh slots start at their cached-prefix length with the
+            # host-allocated block table mapped in
+            start = jnp.asarray(admit["start_pos"])
+            tbl = jnp.asarray(admit["block_table"])
+            lay = dict(cache["layers"])
+            lay["lens"] = jnp.where(nm[None, :], start[None, :],
+                                    lay["lens"])
+            lay["block_table"] = jnp.where(nm[None, :, None], tbl[None],
+                                           lay["block_table"])
+            cache = dict(cache, layers=lay)
+            start_pos = start
+        else:
+            start_pos = jnp.zeros_like(st.prefill_pos)
         new_state = SlotState(
             last_token=jnp.where(nm, 0, st.last_token),
             gen_len=jnp.where(nm, 0, st.gen_len),
             max_new=jnp.where(nm, admit["max_new"], st.max_new),
             eos_id=jnp.where(nm, admit["eos"], st.eos_id),
             phase=jnp.where(nm, PHASE_PREFILL, st.phase),
-            prefill_pos=jnp.where(nm, 0, st.prefill_pos),
+            prefill_pos=jnp.where(nm, start_pos, st.prefill_pos),
             prompt_len=jnp.where(nm, admit["prompt_len"], st.prompt_len),
             chunk_base=jnp.where(anym, admit["base"], st.chunk_base),
             prompt_buf=jnp.where(anym[:, None], admit["tokens"],
@@ -721,6 +1035,13 @@ class ServingEngine:
             # newer request's chunk-refill base
             if occupants[s] is not None and self.active[s] is occupants[s]:
                 self._prefill_pos[s] = int(last_pos[s])
+                # prompt fully consumed → its pages now exist on
+                # device: publish them to the prefix registry
+                if (self.prefix_cache_enabled
+                        and not self._slot_reg_done[s]
+                        and self._prefill_pos[s]
+                        >= len(occupants[s].prompt)):
+                    self._register_prefix(s, occupants[s])
         for k in range(toks.shape[0]):
             for s in range(self.slots):
                 req = occupants[s]
@@ -735,6 +1056,8 @@ class ServingEngine:
                     if self.active[s] is req:
                         self.active[s] = None
                         self._stochastic_slots.discard(s)
+                        if self.paged:
+                            self._release_slot_blocks(s)
 
     def step(self) -> int:
         """Admit what fits, dispatch one megastep (up to ``megastep_k``

@@ -341,3 +341,63 @@ def test_parser_async_knobs():
     defaults = ap.parse_args([])
     assert defaults.pipeline_depth == 1 and not defaults.frontend
     assert defaults.deadline_s is None
+
+
+# -- cancel() x paged prefix sharing (PR-9) ---------------------------
+
+
+def test_cancel_idempotent_and_completed_noop():
+    """cancel() at every terminal state: the second cancel of a
+    cancelled request and the cancel of a normally completed request
+    both return False and don't bump stats.cancelled again."""
+    cfg, m, params, eng = _stack()
+    victim = Request(uid=0, prompt=_prompt(cfg), max_new_tokens=8)
+    eng.submit(victim)
+    eng.step()
+    assert eng.cancel(victim)
+    assert not eng.cancel(victim)          # double-cancel: no-op
+    assert eng.stats.cancelled == 1
+    done = Request(uid=1, prompt=_prompt(cfg, seed=5), max_new_tokens=4)
+    eng.submit(done)
+    eng.run()
+    assert done.done and not done.cancelled
+    assert not eng.cancel(done)            # cancel-of-completed: no-op
+    assert eng.stats.cancelled == 1
+
+
+def test_cancel_keeps_shared_prefix_blocks_live():
+    """Cancelling a slot whose prompt pages are shared (prefix-cache
+    hit) must NOT free the shared blocks: the sibling request still
+    holds references and must keep decoding correctly, and the
+    registry entry survives for future admissions."""
+    cfg = reduced(get_config("deepseek-7b"), d_model=64, d_ff=128,
+                  vocab_size=256, num_heads=2, num_kv_heads=1)
+    m = Model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    eng = ServingEngine(m, params, slots=2, max_len=64, megastep_k=4,
+                        admission="chunked", prefill_chunk=16,
+                        page_size=8, prefix_cache=True)
+    shared = _prompt(cfg, n=17, seed=7)    # 2 full pages to share
+    # first pass registers the prefix pages in the engine registry
+    warm = Request(uid=0, prompt=shared, max_new_tokens=4)
+    eng.submit(warm)
+    eng.run()
+    assert len(eng._prefix_reg) > 0
+    reg_blocks = set(eng._prefix_reg.values())
+
+    victim = Request(uid=1, prompt=shared, max_new_tokens=16)
+    keeper = Request(uid=2, prompt=shared, max_new_tokens=16)
+    eng.submit(victim)
+    eng.submit(keeper)
+    while not (victim.output and keeper.output):
+        eng.step()
+    assert eng.stats.prefix_hits >= 2      # both admissions reused pages
+    before = eng.blocks_in_use
+    assert eng.cancel(victim)
+    # shared pages survive the cancel: refcounts dropped, not zeroed
+    assert all(eng._ref[b] >= 1 for b in reg_blocks)
+    assert eng.blocks_in_use < before      # victim's private tail freed
+    eng.run()
+    assert keeper.output == m.reference_decode(params, shared, 16)
+    # registry entries keep their own reference after full drain
+    assert eng.blocks_in_use == len(eng._prefix_reg) > 0

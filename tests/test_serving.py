@@ -324,7 +324,10 @@ def test_plan_decode_sets_admission_and_donation():
              avg_prompt_len=32)
     assert p.megastep_k >= 1
     assert p.admission in ("chunked", "stall")
-    assert p.donate_carries
+    # donation pairs with depth: a pipelined plan must NOT donate (the
+    # previous carry is still in flight when the next megastep wants
+    # the buffer), a depth-1 plan always should
+    assert p.donate_carries == (p.pipeline_depth < 2)
     assert "admission=" in p.summary()
     # precision is a first-class plan output: memory-bound decode on
     # TPU wants the 4.5-bit stream; the quality floor can veto it
@@ -503,3 +506,125 @@ def test_plan_kernel_backend_flips_quant_ordering():
         sim_p["q8_0"][32768][8].tokens_per_s
     assert sim_x["q8_0"][32768][8].tokens_per_s > \
         sim_x["q4_0"][32768][8].tokens_per_s
+
+
+# ---------------------------------------------------------------------------
+# Paged KV cache (PR-9): planner knob, donation pairing, byte audit
+# ---------------------------------------------------------------------------
+
+
+def test_plan_never_pairs_pipelining_with_donation():
+    """Regression: plan() used to hardcode donate_carries=True even
+    when it chose pipeline_depth>1 — a donated carry can't be reused
+    while the previous megastep still holds it in flight, so the
+    engine had to warn and override at construction. The plan must
+    never emit the pair: donation is on exactly when the decode loop
+    is unpipelined."""
+    from repro.core import TPU_V5E, a17_cpu, plan
+    from repro.configs.base import INPUT_SHAPES
+    for arch in ("deepseek-7b", "mistral-nemo-12b", "mamba2-2.7b"):
+        cfg = get_config(arch)
+        for shape in INPUT_SHAPES.values():
+            for hw in (TPU_V5E, a17_cpu(2)):
+                for hit in (0.0, 0.6):
+                    p = plan(cfg, shape, hw, avg_prompt_len=512,
+                             prefix_hit_rate=hit)
+                    assert not (p.pipeline_depth > 1
+                                and p.donate_carries), \
+                        (arch, shape.name, hit, p.summary())
+                    assert p.donate_carries == (p.pipeline_depth < 2)
+
+
+def test_engine_overrides_donation_when_pipelined():
+    """The engine-side belt to the planner's suspenders: constructing
+    a pipelined engine with donated carries warns and overrides to
+    donate_carries=False instead of serving stale buffers."""
+    import warnings
+    cfg = reduced(get_config("deepseek-7b"), d_model=64, d_ff=128,
+                  vocab_size=256, num_heads=2, num_kv_heads=1)
+    m = Model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    with pytest.warns(RuntimeWarning, match="donate"):
+        eng = ServingEngine(m, params, slots=2, max_len=64,
+                            pipeline_depth=2, donate_carries=True)
+    assert eng.pipeline_depth == 2 and not eng.donate_carries
+    # the consistent pair stays silent
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        eng2 = ServingEngine(m, params, slots=2, max_len=64,
+                             pipeline_depth=2, donate_carries=False)
+    assert not eng2.donate_carries
+    # and the overridden engine still serves correctly
+    req = Request(uid=0, prompt=np.asarray([3, 1, 4, 1, 5], np.int32),
+                  max_new_tokens=5)
+    eng.submit(req)
+    eng.run()
+    assert req.output == m.reference_decode(params, req.prompt, 5)
+
+
+def test_plan_page_size_knob():
+    """page_size is emitted only when prefix reuse beats the gather
+    tax: 0 at the default (no-reuse) hit rate, a sweep size under
+    prefix-heavy traffic, and always 0 for recurrent families."""
+    from repro.core import TPU_V5E, plan, simulate_paging
+    from repro.configs.base import INPUT_SHAPES
+    cfg = get_config("deepseek-7b")
+    shape = INPUT_SHAPES["decode_32k"]
+    p0 = plan(cfg, shape, TPU_V5E, avg_prompt_len=512)
+    assert p0.page_size == 0
+    p_hit = plan(cfg, shape, TPU_V5E, avg_prompt_len=512,
+                 prefix_hit_rate=0.6)
+    assert p_hit.page_size > 0
+    assert "page_size=" in p_hit.summary()
+    p_ssm = plan(get_config("mamba2-2.7b"), shape, TPU_V5E,
+                 avg_prompt_len=512, prefix_hit_rate=0.6)
+    assert p_ssm.page_size == 0
+
+    # the analytic twin behind the knob: paged pool bytes sit far
+    # below the dense high-water prealloc at long context, and prefix
+    # hits buy back rider substeps (none without hits)
+    sim = simulate_paging(cfg, TPU_V5E, prompt_len=512, max_new=64,
+                          kv_len=4096, hit_rate=0.6)
+    assert 0 in sim and sim[0]["pool_bytes"] == sim[0]["dense_bytes"]
+    for p in (8, 16, 32):
+        assert sim[p]["pool_bytes"] < sim[0]["dense_bytes"]
+        assert sim[p]["rider_substeps_saved"] > 0
+    sim0 = simulate_paging(cfg, TPU_V5E, prompt_len=512, max_new=64,
+                           kv_len=4096, hit_rate=0.0)
+    assert all(sim0[p]["rider_substeps_saved"] == 0 for p in (8, 16, 32))
+    # recurrent families degenerate to dense (nothing to page)
+    simr = simulate_paging(get_config("mamba2-2.7b"), TPU_V5E,
+                           prompt_len=512, max_new=64, kv_len=4096,
+                           hit_rate=0.6)
+    for p in (8, 16, 32):
+        assert simr[p]["step"].tokens_per_s == simr[0]["step"].tokens_per_s
+        assert simr[p]["rider_substeps_saved"] == 0
+
+
+@pytest.mark.parametrize("page", (0, 8))
+@pytest.mark.parametrize("kv", KV_FORMATS)
+def test_cache_nbytes_matches_live_pytree(kv, page):
+    """Satellite audit: cache_nbytes() — the number every BENCH
+    section reports — equals the actual bytes of every live cache
+    leaf (pools, block tables, scale planes, lens) for dense and
+    paged caches across cache precisions."""
+    cfg = reduced(get_config("deepseek-7b"), d_model=64, d_ff=128,
+                  vocab_size=256, num_heads=2, num_kv_heads=1)
+    m = Model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    eng = ServingEngine(m, params, slots=2, max_len=64, kv_quant=kv,
+                        page_size=page)
+    leaves = jax.tree_util.tree_leaves(eng.cache)
+    assert eng.cache_nbytes() == sum(int(np.asarray(l).nbytes)
+                                     for l in leaves)
+    if page:
+        # the paged cache really is the pool+table layout: an int32
+        # block table leaf exists and a right-sized pool undercuts the
+        # dense slots*max_len prealloc
+        assert any(l.dtype == jnp.int32 and l.ndim == 2 for l in leaves)
+        small = ServingEngine(m, params, slots=2, max_len=64,
+                              kv_quant=kv, page_size=page,
+                              cache_blocks=2 * (16 // page) + 1)
+        dense = ServingEngine(m, params, slots=2, max_len=64,
+                              kv_quant=kv)
+        assert small.cache_nbytes() < dense.cache_nbytes()

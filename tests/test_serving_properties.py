@@ -67,13 +67,14 @@ def _model(arch, quant="bf16", kv="bf16"):
 
 
 def _engine(arch, slots, k, mode, quant="bf16", kv="bf16",
-            kernels=None) -> ServingEngine:
-    key = (arch, slots, k, mode, quant, kv, kernels)
+            kernels=None, page=0, prefix=False) -> ServingEngine:
+    key = (arch, slots, k, mode, quant, kv, kernels, page, prefix)
     if key not in _ENGINES:
         cfg, m, params = _model(arch, quant, kv)
         _ENGINES[key] = ServingEngine(
             m, params, slots=slots, max_len=64, megastep_k=k,
-            admission=mode, prefill_chunk=16, kernels=kernels)
+            admission=mode, prefill_chunk=16, kernels=kernels,
+            page_size=page, prefix_cache=prefix)
     eng = _ENGINES[key]
     eng.reset()
     # pipeline_depth is host-side orchestration over the same compiled
@@ -405,6 +406,118 @@ def test_greedy_slot_unaffected_by_stochastic_neighbour(seed, temp):
     eng.run()
     assert greedy.done and hot.done and len(hot.output) == 8
     assert greedy.output == m.reference_decode(params, prompt, 8)
+
+
+PAGE_SIZES = (8, 16, 32)          # all divide the 64-slot cache ring
+
+
+@given(st.integers(0, 2 ** 31 - 1), st.sampled_from(ARCHS),
+       st.sampled_from([1, 4, 8]),
+       st.sampled_from(["chunked", "stall"]))
+@settings(max_examples=6, deadline=None)
+def test_paged_engine_token_identical(seed, arch, k, mode):
+    """The paging dimension (PR-9 tentpole): a paged engine — block
+    pool + slot->block-table indirection, allocator recycling on
+    retirement — must be greedy token-identical to the dense engine
+    for every page size, across all four cache families, both
+    admission modes and megastep K ∈ {1, 4, 8}. For the recurrent /
+    windowed families paging is a structural no-op
+    (``Model.paging_effective``) and the identity holds trivially
+    through the dense fallback; for full attention it pins the
+    gather/scatter-through-table read and write paths, the frozen
+    garbage-block writes of retired slots, and the admission-time
+    table splice."""
+    cfg, m, params = _model(arch)
+    rng = np.random.default_rng(seed)
+    reqs_spec = [(p.prompt, p.max_new_tokens)
+                 for p in _random_requests(cfg, rng,
+                                           int(rng.integers(2, 6)))]
+
+    def run(page):
+        eng = _engine(arch, 2, k, mode, page=page)
+        reqs = [Request(uid=i, prompt=p, max_new_tokens=n)
+                for i, (p, n) in enumerate(reqs_spec)]
+        for r in reqs:
+            eng.submit(r)
+        eng.run()
+        assert all(r.done for r in reqs)
+        if eng.paged:
+            assert eng.blocks_in_use == 0   # allocator fully recycled
+        return [r.output for r in reqs]
+
+    dense = run(0)
+    for page in PAGE_SIZES:
+        assert run(page) == dense, (arch, k, mode, page)
+
+
+@given(st.integers(0, 2 ** 31 - 1), st.sampled_from(QUANTS),
+       st.sampled_from([1, 4, 8]))
+@settings(max_examples=3, deadline=None)
+def test_paged_quantized_cache_token_identical(seed, kv, k):
+    """Paging composes with PR-4's quantized cache leaves: int8
+    payload + groupwise scale pages ride the same block tables, and
+    the paged engine stays token-identical to the dense engine under
+    the same ``cfg.kv_quant``."""
+    cfg, m, params = _model("deepseek-7b", kv=kv)
+    rng = np.random.default_rng(seed)
+    reqs_spec = [(p.prompt, p.max_new_tokens)
+                 for p in _random_requests(cfg, rng, 3)]
+    outs = {}
+    for page in (0, 8):
+        eng = _engine("deepseek-7b", 2, k, "chunked", kv=kv, page=page)
+        reqs = [Request(uid=i, prompt=p, max_new_tokens=n)
+                for i, (p, n) in enumerate(reqs_spec)]
+        for r in reqs:
+            eng.submit(r)
+        eng.run()
+        outs[page] = [r.output for r in reqs]
+    assert outs[8] == outs[0], (kv, k)
+
+
+@given(st.integers(0, 2 ** 31 - 1), st.sampled_from([1, 4, 8]),
+       st.sampled_from(PAGE_SIZES))
+@settings(max_examples=4, deadline=None)
+def test_prefix_cache_token_identical_hits_and_misses(seed, k, page):
+    """Shared-prefix copy-on-write reuse: a prefix-cache engine
+    serving a mix of shared-prefix requests (hits after the first
+    registration) and unrelated prompts (misses) emits exactly the
+    dense engine's greedy tokens — the cached pages hold the same
+    bytes chunked admission would have written, so skipping their
+    rider substeps can't move a token. Hit accounting must light up
+    and every block must recycle once the queue drains."""
+    cfg, m, params = _model("deepseek-7b")
+    rng = np.random.default_rng(seed)
+    prefix = rng.integers(1, cfg.vocab_size,
+                          size=int(page * 2 + 1)).astype(np.int32)
+    spec = []
+    for i in range(5):
+        tail = rng.integers(1, cfg.vocab_size, size=int(
+            rng.integers(1, 6))).astype(np.int32)
+        if i % 2 == 0:      # shared-prefix requests interleaved with
+            prompt = np.concatenate([prefix, tail])
+        else:               # unrelated prompts (misses)
+            prompt = tail
+        spec.append((prompt, int(rng.integers(1, 6))))
+
+    def run(pg, pfx):
+        eng = _engine("deepseek-7b", 2, k, "chunked", page=pg,
+                      prefix=pfx)
+        hits0 = eng.stats.prefix_hits
+        reqs = [Request(uid=i, prompt=p, max_new_tokens=n)
+                for i, (p, n) in enumerate(spec)]
+        for r in reqs:
+            eng.submit(r)
+        eng.run()
+        return [r.output for r in reqs], eng.stats.prefix_hits - hits0, \
+            eng
+
+    dense, _, _ = run(0, False)
+    paged, hits, eng = run(page, True)
+    assert paged == dense, (k, page)
+    assert hits >= 1, "shared-prefix workload produced no cache hits"
+    # after the queue drains, only the registry's own references
+    # remain — every slot-held block recycled
+    assert eng.blocks_in_use == len(eng._prefix_reg)
 
 
 @given(st.integers(0, 2 ** 31 - 1))
