@@ -1,8 +1,8 @@
 """End-to-end serving benchmark: the ServingEngine decoding batched
 requests on a reduced model (live execution).
 
-Seven sweeps
-(``--sweep megastep|mixed|precision|kv|kernels|async|paging|all``):
+Eight sweeps (``--sweep
+megastep|mixed|precision|kv|kernels|async|paging|overload|all``):
 
 1. **Megastep sweep** — ``K ∈ {1, 4, 8, 16}``, all requests queued
    upfront (stall admission, the PR-1 configuration): K=1 reproduces
@@ -84,6 +84,24 @@ Seven sweeps
    ``simulate_paging`` provides the analytic twin. Emitted as the
    JSON's ``paging`` section.
 
+8. **Overload sweep** — seeded Poisson arrivals at {1, 2, 3}x the
+   engine's *measured* capacity, replayed tick-identically against
+   two admission policies on the same compiled engine: **bounded**
+   (``max_queue = 2 x slots`` + per-request deadlines → typed sheds
+   at submit, EDF ordering, pool-starved preemption on a deliberately
+   undersized block pool) and the **unbounded baseline** (everything
+   admitted FIFO, deadlines tracked host-side only). Past capacity
+   the unbounded backlog grows without bound, so late arrivals blow
+   through their deadlines and goodput (tokens of deadline-hitting
+   requests per second) decays — while the bounded policy sheds the
+   excess at admission and holds goodput ~flat. Records shed rate,
+   preemption rate, deadline-hit rate, goodput tok/s, and p95
+   latency per (multiple, policy); ``engine.audit()`` asserts the
+   block-pool invariants after every storm.
+   ``scheduler.simulate_overload`` is the analytic twin — the JSON
+   records whether it predicts the measured shed-rate ordering.
+   Emitted as the JSON's ``overload`` section.
+
 Emits ``BENCH_serving.json`` at the repo root (tok/s per K, the K8/K1
 speedup, the chunked/stall mixed-workload ratio, the precision table +
 greedy equivalence bits) so future PRs have a perf trajectory to
@@ -112,7 +130,8 @@ import numpy as np
 from repro.configs import get_config, reduced
 from repro.models import Model
 from repro.quant.quantize import QuantizedTensor
-from repro.serving import Request, SamplingConfig, ServingEngine
+from repro.serving import (Request, SamplingConfig, ServingEngine,
+                           SubmitReject)
 
 KS = (1, 4, 8, 16)
 N_REQUESTS = 32
@@ -211,6 +230,29 @@ MIX_REQUESTS = 96
 MIX_MAX_NEW = 6
 MIX_K = 8
 MIX_REPS = 5
+
+# overload sweep: Poisson arrivals past measured capacity. The block
+# pool is deliberately undersized (12 usable blocks vs a 4-slot x
+# 3-4-page worst case) so pool-starved admissions exercise EDF
+# preemption, and per-request deadlines vary so urgent late arrivals
+# hold strictly-earlier EDF keys than lax residents (the victim
+# eligibility rule). Deadlines are drawn relative to the *measured*
+# aggregate service time so the operating point self-calibrates to
+# whatever this container runs at: the bounded queue's worst-case wait
+# (~queue_bound x service) must straddle the deadline band for the
+# policies to separate.
+OV_SLOTS = 4
+OV_K = 8
+OV_MAX_LEN = 64
+OV_MAX_NEW = 12
+OV_PROMPT_RANGE = (8, 21)
+OV_PAGE = 8
+OV_BLOCKS = 13                  # 12 usable: < slots x 4-page worst case
+OV_QUEUE_BOUND = 2 * OV_SLOTS
+OV_MULTIPLES = (1.0, 2.0, 3.0)  # x measured capacity
+OV_REQUESTS = 40                # arrivals per replay pass
+OV_DEADLINE_RANGE = (6.0, 14.0)  # x measured service_s, per request
+OV_SEED = 7
 
 
 def _requests(n: int = N_REQUESTS, max_new: int = MAX_NEW):
@@ -1117,8 +1159,207 @@ def _sweep_paging(cfg, model, params, out, rows) -> None:
         f"{prefix['greedy_equiv_dense']}"))
 
 
+def _overload_calibrate(eng, cfg, *, min_s: float = 0.0):
+    """Measure aggregate capacity: saturated queue, no deadlines.
+    Returns (service_s per request, megasteps per request, passes)."""
+    wall, steps, n, passes = 0.0, 0, 0, 0
+    while passes == 0 or wall < min_s:
+        eng.reset()
+        rng = np.random.default_rng(OV_SEED)
+        reqs = [Request(uid=i, prompt=rng.integers(
+                    1, cfg.vocab_size, size=int(rng.integers(
+                        *OV_PROMPT_RANGE))).astype(np.int32),
+                    max_new_tokens=OV_MAX_NEW)
+                for i in range(3 * OV_SLOTS)]
+        for r in reqs:
+            eng.submit(r)
+        m0 = eng.stats.megasteps
+        t0 = time.perf_counter()
+        eng.run()
+        wall += time.perf_counter() - t0
+        steps += eng.stats.megasteps - m0
+        n += len(reqs)
+        passes += 1
+    return wall / n, steps / n, passes
+
+
+def _overload_trace(cfg, rng, lam, service_s):
+    """Poisson arrivals in megastep ticks: (tick, prompt, deadline_s,
+    uid). ``lam`` = arrivals per tick; deadlines are seconds (the
+    engine's submit() semantics), drawn relative to measured service."""
+    trace, t = [], 0.0
+    for i in range(OV_REQUESTS):
+        plen = int(rng.integers(*OV_PROMPT_RANGE))
+        prompt = rng.integers(1, cfg.vocab_size,
+                              size=plen).astype(np.int32)
+        dl = float(rng.uniform(*OV_DEADLINE_RANGE)) * service_s
+        trace.append((int(t), prompt, dl, i))
+        t += rng.exponential(1.0 / lam)
+    return trace
+
+
+def _overload_replay(eng, trace, *, bounded: bool):
+    """Replay one arrival trace. Bounded submits with deadlines (typed
+    sheds counted, never fatal); unbounded submits without (nothing
+    shed, nothing preempted) and scores the same deadlines host-side."""
+    pend = collections.deque(trace)
+    live = []                    # [req, deadline_s, t_submit, t_done]
+    shed = 0
+    pre0 = eng.stats.preemptions
+    tick = 0
+    t0 = time.perf_counter()
+    while pend or eng.has_work():
+        while pend and pend[0][0] <= tick:
+            _, prompt, dl, uid = pend.popleft()
+            req = Request(uid=uid, prompt=prompt,
+                          max_new_tokens=OV_MAX_NEW,
+                          deadline_s=dl if bounded else None)
+            try:
+                eng.submit(req)
+            except SubmitReject:
+                shed += 1
+                continue
+            live.append([req, dl, time.perf_counter(), None])
+        eng.step()
+        now = time.perf_counter()
+        for e in live:
+            if e[3] is None and e[0].done:
+                e[3] = now
+        tick += 1
+    wall = time.perf_counter() - t0
+    hit = [e for e in live if e[3] is not None and e[3] - e[2] <= e[1]]
+    return {
+        "wall": wall, "shed": shed, "admitted": len(live),
+        "done": sum(1 for e in live if e[3] is not None),
+        "hits": len(hit),
+        "good_tokens": sum(len(e[0].output) for e in hit),
+        "tokens": sum(len(e[0].output) for e in live),
+        "preempts": eng.stats.preemptions - pre0,
+        "latencies": [e[3] - e[2] for e in live if e[3] is not None],
+    }
+
+
+def _overload_point(eng, cfg, lam, service_s, *, bounded: bool):
+    """One (arrival multiple, policy) measurement on the ≥MIN_TIMED_S
+    floor; traces are seeded per pass so both policies replay identical
+    arrival schedules, prompts, and deadlines."""
+    tot = collections.Counter()
+    lats, passes = [], 0
+    while passes == 0 or tot["wall"] < MIN_TIMED_S:
+        eng.reset()
+        eng.max_queue = OV_QUEUE_BOUND if bounded else 0
+        rng = np.random.default_rng(OV_SEED + 1 + passes)
+        trace = _overload_trace(cfg, rng, lam, service_s)
+        r = _overload_replay(eng, trace, bounded=bounded)
+        lats += r.pop("latencies")
+        tot.update(r)
+        eng.audit()              # pool invariants hold after the storm
+        passes += 1
+    offered = tot["shed"] + tot["admitted"]
+    return {
+        "shed_rate": round(tot["shed"] / offered, 3),
+        "preempt_rate": round(tot["preempts"] / max(tot["admitted"], 1),
+                              3),
+        "deadline_hit_rate": round(tot["hits"] / offered, 3),
+        "goodput_tok_s": round(tot["good_tokens"] / tot["wall"], 1),
+        "decode_tok_s": round(tot["tokens"] / tot["wall"], 1),
+        "p95_latency_s": (round(float(np.percentile(lats, 95)), 4)
+                          if lats else None),
+        "offered": offered,
+        "completed": tot["done"],
+        "preemptions": tot["preempts"],
+        "decode_wall_s": round(tot["wall"], 4),
+        "timed_passes": passes,
+    }
+
+
+def _sweep_overload(cfg, model, params, out, rows) -> None:
+    """Bounded admission (max_queue + deadlines + preemption) vs the
+    unbounded baseline under Poisson arrivals past measured capacity:
+    the overload-PR acceptance claim, measured."""
+    eng = ServingEngine(model, params, slots=OV_SLOTS,
+                        max_len=OV_MAX_LEN, sampling=SamplingConfig(),
+                        megastep_k=OV_K, admission="chunked",
+                        megastep_unroll=True, page_size=OV_PAGE,
+                        cache_blocks=OV_BLOCKS)
+    _overload_calibrate(eng, cfg)            # untimed: compilation
+    service_s, steps_per_req, cal_passes = _overload_calibrate(
+        eng, cfg, min_s=MIN_TIMED_S)
+    capacity_rps = 1.0 / service_s
+
+    points: Dict[str, Dict] = {}
+    for mult in OV_MULTIPLES:
+        lam = mult / steps_per_req           # arrivals per megastep
+        pt = {"arrival_rps": round(mult * capacity_rps, 2)}
+        for tag, bounded in (("bounded", True), ("unbounded", False)):
+            pt[tag] = _overload_point(eng, cfg, lam, service_s,
+                                      bounded=bounded)
+        points[f"x{mult:g}"] = pt
+    eng.max_queue = 0
+
+    # analytic twin at the paper's 2-thread A17 point: does the napkin
+    # model predict the measured shed-rate ordering across multiples?
+    from repro.core import a17_cpu
+    from repro.core.scheduler import simulate_overload
+    sim = simulate_overload(cfg, a17_cpu(2), slots=OV_SLOTS, k=OV_K,
+                            prompt_len=sum(OV_PROMPT_RANGE) // 2,
+                            max_new=OV_MAX_NEW, page_size=OV_PAGE,
+                            cache_blocks=OV_BLOCKS,
+                            arrival_multiples=OV_MULTIPLES)
+    pred_shed = [round(sim["sweep"][m]["bounded"]["shed_rate"], 3)
+                 for m in OV_MULTIPLES]
+    meas_shed = [points[f"x{m:g}"]["bounded"]["shed_rate"]
+                 for m in OV_MULTIPLES]
+    order_ok = (
+        all(a <= b for a, b in zip(pred_shed, pred_shed[1:]))
+        and all(a <= b for a, b in zip(meas_shed, meas_shed[1:]))
+        and ((pred_shed[-1] > pred_shed[0])
+             == (meas_shed[-1] > meas_shed[0])))
+
+    g2b = points["x2"]["bounded"]["goodput_tok_s"]
+    g2u = points["x2"]["unbounded"]["goodput_tok_s"]
+    out["overload"] = {
+        "slots": OV_SLOTS, "megastep_k": OV_K, "max_len": OV_MAX_LEN,
+        "max_new": OV_MAX_NEW, "page_size": OV_PAGE,
+        "cache_blocks": OV_BLOCKS, "queue_bound": OV_QUEUE_BOUND,
+        "admission": "chunked", "sampling": "greedy",
+        "arrivals_per_pass": OV_REQUESTS,
+        "deadline_range_x_service": list(OV_DEADLINE_RANGE),
+        "min_timed_s": MIN_TIMED_S,
+        "capacity": {
+            "service_s_per_request": round(service_s, 5),
+            "capacity_rps": round(capacity_rps, 2),
+            "megasteps_per_request": round(steps_per_req, 3),
+            "calibration_passes": cal_passes,
+        },
+        "sweep": points,
+        "analytic_a17_2t": {
+            "capacity_rps": round(sim["capacity"]["capacity_rps"], 3),
+            "max_live_requests": sim["capacity"]["max_live_requests"],
+            "predicted_bounded_shed_rate": dict(
+                zip([f"x{m:g}" for m in OV_MULTIPLES], pred_shed)),
+        },
+        "predicted_shed_order_matches": order_ok,
+        "bounded_beats_unbounded_at_2x": g2b > g2u,
+    }
+    rows.append((
+        "serving/overload_goodput_2x",
+        g2b / max(g2u, 1e-9) * 100,
+        f"bounded {g2b:.0f} vs unbounded {g2u:.0f} goodput tok/s at 2x "
+        f"capacity (shed {points['x2']['bounded']['shed_rate']:.0%}, "
+        f"preempt {points['x2']['bounded']['preempt_rate']:.2f}/req); "
+        f"analytic shed ordering matches: {order_ok}"))
+    rows.append((
+        "serving/overload_shed_3x",
+        meas_shed[-1] * 100,
+        f"bounded shed rate across x1/x2/x3 capacity: "
+        f"{meas_shed} (predicted {pred_shed}); unbounded p95 latency "
+        f"{points[f'x{OV_MULTIPLES[-1]:g}']['unbounded']['p95_latency_s']}s vs bounded "
+        f"{points[f'x{OV_MULTIPLES[-1]:g}']['bounded']['p95_latency_s']}s at 3x"))
+
+
 _SWEEPS = ("megastep", "mixed", "precision", "kv", "kernels", "async",
-           "paging")
+           "paging", "overload")
 
 
 def run(sweeps: Sequence[str] = _SWEEPS) -> List[Tuple[str, float, str]]:
@@ -1143,6 +1384,8 @@ def run(sweeps: Sequence[str] = _SWEEPS) -> List[Tuple[str, float, str]]:
         _sweep_async(cfg, model, params, out, rows)
     if "paging" in sweeps:
         _sweep_paging(cfg, model, params, out, rows)
+    if "overload" in sweeps:
+        _sweep_overload(cfg, model, params, out, rows)
     path.write_text(json.dumps(out, indent=2) + "\n")
     rows.append(("serving/bench_json", 0.0,
                  f"wrote {path.name} sections: {', '.join(sweeps)}"))

@@ -36,6 +36,36 @@ calls suspend — backpressure, not an error). Cancelling the awaiting
 task (``task.cancel()``) cancels the request in the engine too.
 
   PYTHONPATH=src python examples/serve_batch.py --frontend --deadline-s 2
+
+Failure semantics (the overload-PR contract — every outcome is typed
+and observable; overload is a steady state, not a crash)::
+
+    # shed at admission, before holding any resource: subclasses of
+    # serving.SubmitReject (a ValueError)
+    try:
+        engine.submit(req)
+    except QueueFull as e:          # max_queue bound hit
+        sleep(e.retry_after_s or 0.1); resubmit()
+    except InfeasibleDeadline:      # deadline < service even unqueued
+        drop()                      # no tokens it could ever use
+    except PromptTooLong:           # can never fit the cache
+        truncate_or_raise_max_len()
+
+    # preempted under pool pressure: evicted, requeued, resumed by
+    # re-prefilling prompt + generated prefix — token-identical under
+    # greedy sampling; req.preemptions counts evictions
+    # poisoned (NaN/inf logits): the slot freezes its cache and
+    # retires with req.error == "nonfinite-logits"; co-batched
+    # requests' streams are untouched (byte-identical)
+
+    # the asyncio front-end surfaces the same outcomes per call:
+    # Backpressure (with retry_after_s) for QueueFull, RequestFailed
+    # for error-retired requests, DeadlineExceeded (partial tokens)
+    # for expired deadlines, ValueError for the other rejects
+
+``engine.audit()`` (or ``launch.serve --audit``, per step) asserts the
+block-pool/queue/slot invariants; ``serving.FaultInjector`` replays
+seeded fault schedules against all of the above deterministically.
 """
 import argparse
 import asyncio

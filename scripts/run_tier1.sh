@@ -2,10 +2,12 @@
 # Tier-1 verification wrapper: the pytest suite with a pinned
 # hypothesis seed/profile so runs are deterministic in CI — followed
 # by seeded q4_0 weight-quant, q8_0 kv-cache, async front-end and
-# paged-serving (prefix-hit admission + cancel-recycle) smokes, and a
-# schema check of the committed BENCH_serving.json (the precision,
-# kv_precision, kernel_backend, async_overlap and paging sections must
-# be present: benchmarks/serving_bench.py --sweep ... writes them).
+# paged-serving (prefix-hit admission + cancel-recycle) and chaos
+# (pool exhaustion + poisoned logits + recovery under audit) smokes,
+# and a schema check of the committed BENCH_serving.json (the
+# precision, kv_precision, kernel_backend, async_overlap, paging and
+# overload sections must be present:
+# benchmarks/serving_bench.py --sweep ... writes them).
 #
 # By default the *fast* tier runs: pytest.ini excludes tests marked
 # `slow` (the cross-arch serving property sweeps that push the full
@@ -212,6 +214,52 @@ print(f"[tier1] paged smoke OK: 5 requests token-identical to dense, "
       f"({eng.blocks_in_use} registry-held blocks live after drain)")
 EOF
 
+echo "[tier1] chaos smoke (pool exhaustion + poisoned logits + recovery)"
+python - <<'EOF'
+import jax, numpy as np
+from repro.configs import get_config, reduced
+from repro.models import Model
+from repro.serving import (FaultEvent, FaultInjector, FaultSchedule,
+                           Request, ServingEngine)
+
+cfg = reduced(get_config("deepseek-7b"), d_model=64, d_ff=128,
+              vocab_size=256, num_heads=2, num_kv_heads=1)
+m = Model(cfg)
+params = m.init(jax.random.PRNGKey(0))
+# 12 usable blocks fully back the 3 slots; contention comes from the
+# exhaust_pool fault quarantining most of the pool mid-flight
+eng = ServingEngine(m, params, slots=3, max_len=64, megastep_k=4,
+                    admission="chunked", prefill_chunk=16,
+                    page_size=8, cache_blocks=13)
+rng = np.random.default_rng(3)
+reqs = [Request(uid=i, prompt=rng.integers(
+            1, cfg.vocab_size, size=int(rng.integers(4, 14))
+        ).astype(np.int32), max_new_tokens=8) for i in range(5)]
+for r in reqs:
+    eng.submit(r)
+sched = FaultSchedule([
+    FaultEvent(0, "poison_logits", ridx=2),     # sticks to uid 2
+    FaultEvent(1, "exhaust_pool", blocks=9, duration=2),
+    FaultEvent(4, "preempt", ridx=0),
+])
+inj = FaultInjector(eng, sched, audit=True, sleep=lambda s: None)
+inj.run(reqs)                    # audits after every step
+assert not eng.has_work() and not eng._quarantined
+assert eng.blocks_in_use == len(eng._prefix_reg), "blocks leaked"
+assert reqs[2].error == "nonfinite-logits", reqs[2].error
+assert eng.stats.poisoned == 1 and eng.stats.preemptions >= 1
+for r in reqs:
+    assert r.done, r.uid
+    ref = m.reference_decode(params, r.prompt, r.max_new_tokens)
+    if r.error is None:
+        assert r.output == ref, (r.uid, r.output, ref)
+    else:                        # pre-poison tokens: clean ref prefix
+        assert r.output == ref[:len(r.output)], r.uid
+print(f"[tier1] chaos smoke OK: pool exhausted+recovered, 1 poisoned "
+      f"retire, {eng.stats.preemptions} preemption(s), survivors "
+      f"token-identical, audit held for {inj.steps_run} steps")
+EOF
+
 echo "[tier1] BENCH_serving.json schema check"
 python - <<'EOF'
 import json, pathlib
@@ -300,6 +348,30 @@ for d in ("depth1", "depth2", "depth4"):
 assert ao["host_gap_shrink"] > 1.0, ao["host_gap_shrink"]
 assert ao["greedy_equiv_depths"] is True, \
     "async_overlap: pipelined greedy tokens diverged from depth 1"
+ov = bench["overload"]
+for key in ("capacity", "sweep", "analytic_a17_2t", "queue_bound",
+            "predicted_shed_order_matches",
+            "bounded_beats_unbounded_at_2x", "min_timed_s"):
+    assert key in ov, f"overload section missing key: {key}"
+assert ov["capacity"]["capacity_rps"] > 0
+for mult, pt in ov["sweep"].items():
+    for pol in ("bounded", "unbounded"):
+        row = pt[pol]
+        assert row["decode_wall_s"] >= ov["min_timed_s"], \
+            f"overload {mult}/{pol} timed region shorter than the floor"
+        assert 0.0 <= row["shed_rate"] <= 1.0, (mult, pol)
+        assert row["goodput_tok_s"] >= 0, (mult, pol)
+    assert pt["unbounded"]["shed_rate"] == 0.0, \
+        f"unbounded baseline shed requests at {mult}"
+    assert pt["unbounded"]["preempt_rate"] == 0.0, \
+        f"unbounded baseline preempted (no deadlines -> no EDF) at {mult}"
+# the overload-PR acceptance claim: shedding + preemption beat the
+# unbounded queue's goodput collapse past capacity, and the analytic
+# twin gets the shed-rate ordering right
+assert ov["bounded_beats_unbounded_at_2x"] is True, \
+    "bounded admission lost to the unbounded baseline at 2x capacity"
+assert ov["predicted_shed_order_matches"] is True, \
+    "simulate_overload mispredicted the measured shed-rate ordering"
 print("[tier1] BENCH_serving.json schema OK "
       f"(q4/bf16 @K8 decode = {prec['q4_over_bf16_k8_decode']}; "
       f"kv q8/bf16 @K8 = {kv['q8_over_bf16_k8_decode']}; "

@@ -11,7 +11,7 @@ from repro.core.graph import Graph, Node, Op, build_decoder_graph
 from repro.core.scheduler import (
     find_concurrent_gemms, fusion_plan, simulate_version,
     simulate_megastep, simulate_admission, simulate_precision,
-    simulate_async_overlap, simulate_paging,
+    simulate_async_overlap, simulate_paging, simulate_overload,
     simulate_kv_precision, backend_throughput,
 )
 from repro.core.cost_model import (
@@ -27,7 +27,7 @@ __all__ = [
     "Graph", "Node", "Op", "build_decoder_graph",
     "find_concurrent_gemms", "fusion_plan", "simulate_version",
     "simulate_megastep", "simulate_admission", "simulate_precision",
-    "simulate_async_overlap", "simulate_paging",
+    "simulate_async_overlap", "simulate_paging", "simulate_overload",
     "simulate_kv_precision", "backend_throughput",
     "HardwareSpec", "TPU_V5E", "A17_GPU", "a17_cpu", "roofline",
     "RooflineTerms", "model_flops", "megastep_time",

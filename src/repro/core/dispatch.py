@@ -103,6 +103,23 @@ class ExecutionPlan:
     # it directly; it composes with kv_quant, whose quality_floor_bits
     # veto above still applies to the pages' payload precision.
     page_size: int = 0
+    # Overload protection (engine kwargs, not config overrides):
+    # admission-queue bound — submit() past this depth sheds with a
+    # typed QueueFull instead of growing the backlog without bound.
+    # Emitted for decode shapes when the described arrival rate
+    # exceeds the predicted service capacity (scheduler.
+    # simulate_overload): an unbounded queue past saturation turns
+    # every deadline into a miss as the backlog grows, so shedding at
+    # ~2x the slot count keeps admitted requests' wait bounded.
+    # 0 = unbounded (traffic below capacity never sheds anyway).
+    max_queue: int = 0
+    # paged block-pool size backing the plan (ServingEngine
+    # cache_blocks kwarg), emitted alongside page_size: enough pages
+    # to back every slot's prompt+decode budget plus the reserved
+    # garbage block. 0 = engine default. Sizing the pool below this
+    # trades memory for preemptions (pool-starved admissions evict
+    # least-progress victims) — simulate_overload prices that trade.
+    cache_blocks: int = 0
     # Which dequant execution the plan was priced against: "pallas"
     # (fused in-register dequant — quant_matmul + the quantized decode-
     # attention kernel) or "xla" (materialized bf16 unpack before the
@@ -137,6 +154,8 @@ class ExecutionPlan:
                  f"depth={self.pipeline_depth} "
                  f"donate={self.donate_carries} "
                  f"page_size={self.page_size} "
+                 f"max_queue={self.max_queue} "
+                 f"cache_blocks={self.cache_blocks} "
                  f"quant={self.quant_policy} "
                  f"kv_quant={self.kv_quant} "
                  f"kernels={self.kernel_backend}"]
@@ -231,6 +250,8 @@ def plan(cfg: ModelConfig, shape: InputShape,
     kv_quant = "bf16"
     pipeline_depth = 1
     page_size = 0
+    max_queue = 0
+    cache_blocks = 0
     if shape.kind == "decode":
         step_s = cm.graph_time_wave(g, hw)
         megastep_k = choose_megastep_k(hw, step_s,
@@ -314,6 +335,31 @@ def plan(cfg: ModelConfig, shape: InputShape,
             if best_p and (pg[best_p]["step"].tokens_per_s
                            >= pg[0]["step"].tokens_per_s):
                 page_size = best_p
+        if page_size:
+            # pool sized to back every slot's full prompt+decode
+            # budget (+1 for the reserved garbage block); shrinking
+            # below this trades memory for preemptions
+            slots = max(shape.global_batch, 1)
+            need = (avg_prompt_len or max(shape.seq_len, 1)) + max_new
+            cache_blocks = slots * (-(-need // page_size)) + 1
+        if arrival_rate_per_s > 0.0:
+            # Queue bound: emitted only when the described arrival
+            # rate exceeds predicted service capacity — below
+            # saturation an unbounded queue never grows, past it
+            # shedding at ~2x slots keeps admitted waits bounded
+            # (scheduler.simulate_overload's bounded-vs-unbounded
+            # goodput cliff).
+            from repro.core.scheduler import simulate_overload
+            ov = simulate_overload(
+                cfg, hw, slots=max(shape.global_batch, 1),
+                k=megastep_k,
+                prompt_len=avg_prompt_len or max(shape.seq_len, 1),
+                max_new=max_new, page_size=page_size or 8,
+                cache_blocks=cache_blocks,
+                kernel_backend=kernel_backend)
+            cap = ov["capacity"]
+            if arrival_rate_per_s > cap["capacity_rps"]:
+                max_queue = cap["queue_bound"]
     # depth >= 2 with donated carries serializes dispatch (the PR 6
     # caveat documented on the field above) — the planner must never
     # emit the pair.
@@ -324,7 +370,8 @@ def plan(cfg: ModelConfig, shape: InputShape,
         megastep_k=megastep_k, admission=admission,
         donate_carries=(pipeline_depth < 2), quant_policy=quant_policy,
         kv_quant=kv_quant, pipeline_depth=pipeline_depth,
-        kernel_backend=kernel_backend, page_size=page_size)
+        kernel_backend=kernel_backend, page_size=page_size,
+        max_queue=max_queue, cache_blocks=cache_blocks)
 
 
 def choose_megastep_k(hw: cm.HardwareSpec, step_s: float, *,

@@ -558,6 +558,125 @@ def simulate_async_overlap(cfg: ModelConfig,
     return out
 
 
+def simulate_overload(cfg: ModelConfig,
+                      hw: Optional[cm.HardwareSpec] = None, *,
+                      threads: int = 4, slots: int = 4, k: int = 8,
+                      prompt_len: int = 32, max_new: int = 32,
+                      page_size: int = 8, cache_blocks: int = 0,
+                      arrival_multiples: Sequence[float] = (0.5, 1.0,
+                                                           2.0, 3.0),
+                      deadline_factor: float = 3.0,
+                      horizon_s: Optional[float] = None,
+                      weight_format: str = "f16",
+                      donate_carries: bool = True,
+                      kernel_backend: str = "pallas",
+                      ) -> Dict[str, Dict]:
+    """Overload behavior of a bounded vs unbounded admission queue,
+    analytically — the twin of ``serving_bench --sweep overload`` and
+    the model behind ``dispatch.plan``'s queue-bound knob.
+
+    Capacity first: a request occupies a slot for
+    ``prompt_len + max_new`` chunked substeps (prompt rides in-scan),
+    and the block pool caps concurrency at
+    ``(cache_blocks - 1) // pages_per_request`` slots — whichever is
+    smaller sets the service rate ``mu`` (requests/s). Then, per
+    arrival rate ``lambda = m * mu``:
+
+    - **bounded queue + EDF + preemption** sheds the excess at
+      admission: shed fraction ``max(0, (lambda - mu) / lambda)``,
+      queue wait stays ~bounded (``queue_bound / mu``), so admitted
+      requests hit a deadline of ``deadline_factor x`` their service
+      time as long as the bound is modest — goodput
+      ``min(lambda, mu) * max_new * hit`` tok/s holds flat past
+      saturation. Preemption rate ~= the pool-starved fraction of
+      admissions (arrivals finding all block-budgeted slots busy while
+      extra slots idle).
+    - **unbounded queue** sheds nothing but its backlog grows
+      ``(lambda - mu) * t``; by the end of a ``horizon_s`` window
+      (default: 10x the deadline) the queue wait crosses any fixed
+      deadline, so only requests arriving in the first
+      ``t* = (D - service) * mu / (lambda - mu)`` seconds (D = the
+      deadline) finish in time — goodput *decays* with the horizon
+      instead of holding. That's the measured cliff the bench shows
+      and the reason ``plan`` emits a queue bound at all.
+
+    Returns ``{"capacity": {...}, "sweep": {multiple: {"bounded":
+    {...}, "unbounded": {...}}}}`` with shed/preempt/goodput/hit-rate
+    entries per point.
+    """
+    hw = hw or cm.a17_cpu(threads)
+    g = build_decoder_graph(cfg, seq=1, kv_len=prompt_len + max_new,
+                            batch=slots, weight_format=weight_format,
+                            fused=True)
+    per_tok = cm.graph_time_wave(g, hw, overlap_efficiency=0.92) \
+        + _xla_unpack_penalty_s(g, weight_format, hw, kernel_backend)
+    carry = cm.decode_carry_bytes(cfg, slots, prompt_len + max_new)
+    substep = cm.megastep_time(per_tok, hw, k, carry_bytes=carry,
+                               donate_carries=donate_carries,
+                               kernel_backend=kernel_backend) / k
+    service_s = (prompt_len + max_new) * substep
+    pages_per_req = -(-(prompt_len + max_new) // max(page_size, 1))
+    pool_slots = ((cache_blocks - 1) // pages_per_req
+                  if cache_blocks else slots)
+    max_live = max(1, min(slots, pool_slots))
+    mu = max_live / service_s                      # requests/s
+    queue_bound = 2 * slots
+    deadline_s = deadline_factor * service_s
+    if horizon_s is None:
+        horizon_s = 10.0 * deadline_s
+    # pool-starved admissions preempt: the fraction of slot capacity
+    # the block pool can't back (idle slots an arrival would claim if
+    # a victim's blocks were recycled)
+    preempt_frac = (max(0.0, (min(slots, queue_bound) - max_live)
+                        / float(slots)) if cache_blocks else 0.0)
+
+    sweep: Dict[float, Dict] = {}
+    for m in arrival_multiples:
+        lam = m * mu
+        over = max(0.0, lam - mu)
+        # bounded: shed keeps the queue at its bound; an admitted
+        # request waits its mean queue position (~half the bound)
+        # draining at mu
+        shed = over / lam if lam > 0 else 0.0
+        wait_b = (0.5 * queue_bound / mu) if over > 0 else \
+            (0.5 * min(lam, mu) / mu) * service_s
+        hit_b = 1.0 if wait_b + service_s <= deadline_s else max(
+            0.0, 1.0 - (wait_b + service_s - deadline_s) / deadline_s)
+        good_b = min(lam, mu) * max_new * hit_b
+        # unbounded: nothing shed, backlog grows over * t; a request
+        # arriving at t waits over * t / mu — past t* it misses D
+        if over > 0:
+            slack = max(deadline_s - service_s, 0.0)
+            t_star = slack * mu / over
+            hit_u = min(1.0, max(0.0, t_star / horizon_s))
+        else:
+            hit_u = hit_b
+        good_u = min(lam, mu) * max_new * hit_u
+        sweep[m] = {
+            "arrival_rps": lam,
+            "bounded": {"shed_rate": shed,
+                        "preempt_rate": (1.0 - shed) * preempt_frac,
+                        "deadline_hit_rate": hit_b,
+                        "goodput_tok_s": good_b},
+            "unbounded": {"shed_rate": 0.0,
+                          "preempt_rate": 0.0,
+                          "deadline_hit_rate": hit_u,
+                          "goodput_tok_s": good_u},
+        }
+    return {
+        "capacity": {
+            "service_s_per_request": service_s,
+            "drain_s_per_request": 1.0 / mu,
+            "max_live_requests": max_live,
+            "pages_per_request": pages_per_req,
+            "capacity_rps": mu,
+            "queue_bound": queue_bound,
+            "deadline_s": deadline_s,
+        },
+        "sweep": sweep,
+    }
+
+
 def backend_throughput(cfg: ModelConfig, backend: str, *,
                        threads: int = 2, weight_format: str = "f16",
                        kv_len: int = 64, seq: int = 1,

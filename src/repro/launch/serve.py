@@ -45,7 +45,8 @@ import numpy as np
 from repro.configs import get_config, reduced
 from repro.models import Model
 from repro.quant import quantize_tree
-from repro.serving import Request, SamplingConfig, ServingEngine
+from repro.serving import (QueueFull, Request, SamplingConfig,
+                           ServingEngine, SubmitReject)
 
 
 class DeadlineExceeded(Exception):
@@ -58,6 +59,41 @@ class DeadlineExceeded(Exception):
             f"request {uid} cancelled at deadline after "
             f"{len(tokens)} token(s)")
         self.uid = uid
+        self.tokens = tokens
+
+
+class Backpressure(Exception):
+    """Raised by ``generate`` when the engine sheds the request at its
+    queue bound (``QueueFull``). ``retry_after_s`` is the predicted
+    backlog drain time — from the engine's measured substep rate when
+    it has one, else the front-end's ``drain_hint_s`` (seeded from
+    ``dispatch.plan``'s predicted decode rate) scaled by queue depth.
+    Callers should back off ~that long before resubmitting."""
+
+    def __init__(self, uid: int, retry_after_s: Optional[float],
+                 queue_depth: int):
+        hint = (f"retry after ~{retry_after_s:.3f}s"
+                if retry_after_s is not None else "retry after a drain")
+        super().__init__(
+            f"request {uid} shed at queue bound "
+            f"(depth {queue_depth}); {hint}")
+        self.uid = uid
+        self.retry_after_s = retry_after_s
+        self.queue_depth = queue_depth
+
+
+class RequestFailed(Exception):
+    """Raised by ``generate`` when the engine error-retires the
+    request (e.g. ``nonfinite-logits`` from the in-scan finiteness
+    check). ``.tokens`` carries output generated before the failure;
+    co-batched requests are unaffected."""
+
+    def __init__(self, uid: int, reason: str, tokens: List[int]):
+        super().__init__(
+            f"request {uid} failed: {reason} "
+            f"(after {len(tokens)} token(s))")
+        self.uid = uid
+        self.reason = reason
         self.tokens = tokens
 
 
@@ -84,17 +120,27 @@ class AsyncServingFrontend:
 
     ``generate`` resolves with the full token list, raises
     :class:`DeadlineExceeded` (carrying partial tokens) on deadline
-    expiry, and propagates ``ValueError`` for requests the engine
-    rejects at ``submit()`` (empty prompt, negative budget).
-    Cancelling the awaiting asyncio task cancels the request in the
-    engine too — the slot retires via the same frozen-write path.
+    expiry, raises :class:`Backpressure` (with a retry-after hint)
+    when the engine sheds the request at its ``max_queue`` bound,
+    raises :class:`RequestFailed` when the engine error-retires it
+    (nonfinite logits), and propagates ``ValueError`` for requests the
+    engine rejects at ``submit()`` (empty prompt, negative budget,
+    ``PromptTooLong``). Cancelling the awaiting asyncio task cancels
+    the request in the engine too — the slot retires via the same
+    frozen-write path.
+
+    ``drain_hint_s`` seeds the backpressure retry-after estimate (per
+    queued request) before the engine has measured its own substep
+    rate — pass ``dispatch.plan``'s predicted seconds-per-request.
     """
 
-    def __init__(self, engine: ServingEngine, *, max_pending: int = 32):
+    def __init__(self, engine: ServingEngine, *, max_pending: int = 32,
+                 drain_hint_s: Optional[float] = None):
         if max_pending < 1:
             raise ValueError(f"max_pending must be >= 1 (got {max_pending})")
         self.engine = engine
         self.max_pending = max_pending
+        self.drain_hint_s = drain_hint_s
         self._sem = asyncio.Semaphore(max_pending)
         self._incoming: List[_Handle] = []   # staged, not yet submitted
         self._live: List[_Handle] = []       # submitted, future pending
@@ -163,6 +209,14 @@ class AsyncServingFrontend:
                 self.engine.submit(h.req)
                 h.admitted = True
                 self._live.append(h)
+            except QueueFull as e:       # shed: surface backpressure
+                retry = e.retry_after_s
+                if retry is None and self.drain_hint_s is not None:
+                    retry = self.drain_hint_s * max(e.queue_depth, 1)
+                if not h.future.done():
+                    h.future.set_exception(Backpressure(
+                        h.req.uid, retry, e.queue_depth))
+                self._sem.release()
             except ValueError as e:      # rejected at admission
                 if not h.future.done():
                     h.future.set_exception(e)
@@ -194,6 +248,9 @@ class AsyncServingFrontend:
                 if h.expired:
                     h.future.set_exception(DeadlineExceeded(
                         h.req.uid, list(h.req.output)))
+                elif h.req.error is not None:
+                    h.future.set_exception(RequestFailed(
+                        h.req.uid, h.req.error, list(h.req.output)))
                 else:
                     h.future.set_result(list(h.req.output))
             self._sem.release()
@@ -279,6 +336,17 @@ def build_parser() -> argparse.ArgumentParser:
                          "streaming callbacks) instead of engine.run()")
     ap.add_argument("--deadline-s", type=float, default=None,
                     help="per-request deadline for --frontend runs")
+    ap.add_argument("--max-queue", type=int, default=0,
+                    help="bound the engine's admission queue: submit() "
+                         "past this depth raises QueueFull (load "
+                         "shedding; the front-end surfaces it as "
+                         "Backpressure with a retry-after hint). "
+                         "0 = unbounded")
+    ap.add_argument("--audit", action="store_true",
+                    help="run engine.audit() after every step (block-"
+                         "pool partition, refcounts, slot/queue "
+                         "invariants) — cheap host-side checks; raises "
+                         "EngineAuditError on the first violation")
     return ap
 
 
@@ -313,6 +381,8 @@ def _run_frontend(engine: ServingEngine, cfg, args) -> int:
                 return 0
             except DeadlineExceeded:
                 return 1
+            except (Backpressure, RequestFailed):
+                return 1                 # shed or error-retired
 
         tasks = []
         for p in prompts:
@@ -349,7 +419,9 @@ def main(argv: Optional[List[str]] = None) -> None:
                            kernels=args.kernels or None,
                            pipeline_depth=args.pipeline_depth,
                            page_size=args.page_size,
-                           prefix_cache=args.prefix_cache)
+                           prefix_cache=args.prefix_cache,
+                           max_queue=args.max_queue)
+    engine.audit_every_step = args.audit
 
     # Warmup pays jit compile; reset() keeps the compiled executables
     # but zeroes the stats so the timed run is compile-excluded (the
@@ -373,7 +445,14 @@ def main(argv: Optional[List[str]] = None) -> None:
                   if args.prefix_cache and args.page_size else 0)
         for r in _make_requests(cfg, args.requests, args.max_new,
                                 shared_prefix=shared):
-            engine.submit(r)
+            try:
+                engine.submit(r)
+            except SubmitReject:
+                # typed shed (QueueFull under --max-queue): counted in
+                # stats.shed and reported below, never fatal — the CLI
+                # submits its whole batch upfront, so a bounded queue
+                # legitimately refuses the overflow
+                pass
         engine.run()
     wall = time.perf_counter() - t0
 
@@ -394,6 +473,10 @@ def main(argv: Optional[List[str]] = None) -> None:
           f"{st.megasteps} dispatches [K={engine.megastep_k}], "
           f"{st.prefills} prefills: {admit}; "
           f"drain-wait {st.drain_wait_s:.3f}s)")
+    if st.shed or st.preemptions or st.poisoned:
+        print(f"overload: {st.shed} shed, {st.preemptions} "
+              f"preemptions, {st.poisoned} poisoned-retired "
+              f"(queue bound {engine.max_queue or 'none'})")
     if engine.page_size:
         print(f"paging: {engine.cache_blocks} blocks x "
               f"{engine.page_size} tokens, {engine.blocks_in_use} "

@@ -1,9 +1,16 @@
 from repro.serving.engine import (
     DEFAULT_MEGASTEP_K, PHASE_DECODE, PHASE_IDLE, PHASE_PREFILL,
-    EngineStats, Request, ServingEngine, SlotState)
+    EngineAuditError, EngineStats, InfeasibleDeadline, PromptTooLong,
+    QueueFull, Request, ServingEngine, SlotState, SubmitReject)
+from repro.serving.faults import (
+    FaultEvent, FaultInjector, FaultSchedule, TransientStepFault)
 from repro.serving.sampler import SamplingConfig, sample, sample_batched
 
 __all__ = ["ServingEngine", "Request", "EngineStats", "SlotState",
            "SamplingConfig", "sample", "sample_batched",
            "DEFAULT_MEGASTEP_K",
-           "PHASE_IDLE", "PHASE_PREFILL", "PHASE_DECODE"]
+           "PHASE_IDLE", "PHASE_PREFILL", "PHASE_DECODE",
+           "SubmitReject", "QueueFull", "InfeasibleDeadline",
+           "PromptTooLong", "EngineAuditError",
+           "FaultEvent", "FaultSchedule", "FaultInjector",
+           "TransientStepFault"]

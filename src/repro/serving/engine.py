@@ -78,6 +78,43 @@ mask (``decode_step(advance_mask=...)``), so finished slots emit pad
 tokens without corrupting their cache. ``core.dispatch.plan`` picks K
 (and the admission mode) from the same dispatch-overhead napkin math
 the paper's §6 model uses to predict the CPU win.
+
+**Failure semantics (overload + poisoned requests).** On-device
+serving lives permanently near its resource ceiling, so running out is
+a steady state to schedule around, not an error to crash on. Three
+distinct outcomes, all observable per request:
+
+- **Shed** — ``submit()`` raises a typed reject *before* the request
+  holds any resource: ``QueueFull`` when ``max_queue`` is set and the
+  queue is at its bound (carries a ``retry_after_s`` hint from the
+  engine's measured drain rate), ``InfeasibleDeadline`` when
+  ``Request.deadline_s`` cannot be met even by an empty engine, and
+  ``PromptTooLong`` when the prompt can never fit the cache (the
+  ring/page write would otherwise corrupt the slot's own stream).
+  All subclass ``SubmitReject`` (a ``ValueError``). The queue orders
+  by earliest deadline first (EDF); deadline-less requests stay FIFO
+  behind their submission order.
+- **Preempted** — when a paged admission cannot get blocks even after
+  registry eviction, the engine may preempt a victim slot (least
+  progress, non-shared-prefix first, and only one whose EDF key is
+  strictly later than the incoming request's — so preemption can
+  never livelock). The victim's slot retires through the frozen-write
+  mask, its private blocks are recycled refcount-aware, and the
+  request is requeued to recompute from its prompt + generated
+  prefix; a greedy preempted-then-resumed request is token-identical
+  to an uninterrupted run. ``Request.preemptions`` counts round
+  trips; the outcome is otherwise invisible to the caller.
+- **Errored** — an in-jit finiteness check on per-slot logits retires
+  any slot that produces NaN/inf through the same frozen-write path
+  (``Request.error = "nonfinite-logits"``, ``done=True``) while the
+  rest of the batch continues untouched; survivors are byte-identical
+  to a run without the poisoned request.
+
+``audit()`` checks the allocator invariants (free ∪ quarantined ∪
+referenced partitions the pool; refcounts match table references;
+block 0 never mapped) after any step — ``serving.faults`` runs it
+after every step under chaos schedules, ``launch.serve --audit`` in
+production loops.
 """
 from __future__ import annotations
 
@@ -107,6 +144,45 @@ PHASE_IDLE = 0      # retired / never filled: cache frozen, no emission
 PHASE_PREFILL = 1   # consuming prompt tokens in-scan, no emission yet
 PHASE_DECODE = 2    # generating: sample + emit every substep
 
+_INF = float("inf")
+
+
+class SubmitReject(ValueError):
+    """Typed admission reject: the request was refused at ``submit()``
+    before holding any engine resource. ``retry_after_s`` is a hint
+    (None when the engine has no measured rate yet); ``reason`` names
+    the reject class for logging/metrics."""
+    reason = "rejected"
+
+    def __init__(self, msg: str, *, uid: Optional[int] = None,
+                 retry_after_s: Optional[float] = None,
+                 queue_depth: int = 0):
+        super().__init__(msg)
+        self.uid = uid
+        self.retry_after_s = retry_after_s
+        self.queue_depth = queue_depth
+
+
+class QueueFull(SubmitReject):
+    """Load shed: the bounded queue (``max_queue``) is at capacity."""
+    reason = "queue_full"
+
+
+class InfeasibleDeadline(SubmitReject):
+    """Load shed: ``Request.deadline_s`` cannot be met even if the
+    request were admitted immediately (measured service rate)."""
+    reason = "infeasible_deadline"
+
+
+class PromptTooLong(SubmitReject):
+    """The prompt can never fit this engine's cache: admitting it
+    would write past the slot's rows and corrupt its own stream."""
+    reason = "prompt_too_long"
+
+
+class EngineAuditError(AssertionError):
+    """An allocator/scheduler invariant does not hold (see audit())."""
+
 
 @dataclasses.dataclass
 class Request:
@@ -118,10 +194,20 @@ class Request:
     temperature: Optional[float] = None
     top_k: Optional[int] = None
     top_p: Optional[float] = None
+    # soft completion deadline in seconds from submit; orders the queue
+    # (EDF) and arms the infeasibility shed — the engine never cancels
+    # on expiry itself (the front-end's deadline sweep does that)
+    deadline_s: Optional[float] = None
     # filled by the engine:
     output: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
     cancelled: bool = False          # retired via ServingEngine.cancel()
+    error: Optional[str] = None      # fault status (e.g. poisoned logits)
+    preemptions: int = 0             # times evicted + requeued for recompute
+    # scheduler-internal: submission order + absolute deadline
+    _seq: int = dataclasses.field(default=0, repr=False)
+    _deadline_abs: Optional[float] = dataclasses.field(default=None,
+                                                       repr=False)
 
 
 @dataclasses.dataclass
@@ -137,6 +223,9 @@ class EngineStats:
     prefix_hits: int = 0         # admissions that reused cached blocks
     prefix_hit_tokens: int = 0   # prompt tokens skipped via shared pages
     blocks_recycled: int = 0     # pool blocks returned to the free list
+    preemptions: int = 0         # slots evicted + requeued for recompute
+    shed: int = 0                # submits rejected (queue full / deadline)
+    poisoned: int = 0            # requests retired on non-finite logits
     decode_wall_s: float = 0.0   # wall time in megastep dispatch + drain
     # pipelining attribution: where the decode wall actually goes
     stage_wall_s: float = 0.0    # host time building admission arrays
@@ -201,7 +290,8 @@ class ServingEngine:
                  pipeline_depth: int = 1,
                  page_size: int = 0,
                  cache_blocks: Optional[int] = None,
-                 prefix_cache: bool = False):
+                 prefix_cache: bool = False,
+                 max_queue: int = 0):
         # Kernel backend is a serving dimension like kv_quant: one
         # switch lights up the whole fused-dequant Pallas path (the
         # quant_matmul decode GEMVs *and* the quantized-KV decode
@@ -312,11 +402,20 @@ class ServingEngine:
                 stacklevel=2)
             self.donate_carries = donate_carries = False
 
+        # EDF-ordered admission queue; ``max_queue`` bounds it (0 =
+        # unbounded — the pre-overload-PR behaviour) and submit() sheds
+        # with a typed reject instead of growing it past the bound.
+        if int(max_queue) < 0:
+            raise ValueError(f"max_queue must be >= 0 (got {max_queue})")
+        self.max_queue = int(max_queue)
         self.queue: Deque[Request] = collections.deque()
+        # run audit() after every step() (the launch.serve --audit flag)
+        self.audit_every_step = False
 
         # recurrent state makes padding unsound → exact-length buckets
         self._pad_prefill = self.cfg.arch_type not in ("ssm", "hybrid")
         window = model.window_for(max_len)
+        self._has_window = bool(window)
         self._cache_seq = min(max_len, window) if window else max_len
 
         # -- paged KV cache (block pool + per-slot block tables) ------
@@ -412,9 +511,22 @@ class ServingEngine:
         self._inflight: Deque = collections.deque()
         # host mirror of prefill progress (from the megastep's pos row)
         self._prefill_pos: List[int] = [0] * self.slots
+        # the prompt each slot was admitted with (the *effective*
+        # prompt: original + pre-preemption tokens for resumed
+        # requests) — chunk refills must window over this, not the
+        # request's live fields, which keep growing during decode
+        self._slot_prompt: List[Optional[np.ndarray]] = \
+            [None] * self.slots
         # slots currently serving a stochastic (temperature>0) request;
         # empty → the megastep compiles/runs its argmax-only variant
         self._stochastic_slots: set = set()
+        # blocks withheld from the allocator (fault injection / admission
+        # headroom) — a first-class owner class the audit partitions on
+        self._quarantined: List[int] = []
+        # uids whose logits the megastep overwrites with NaN (the
+        # fault-injection surface for poisoned-request isolation)
+        self._poison_uids: set = set()
+        self._submit_seq = 0
         self.queue.clear()
         self.stats = EngineStats()
 
@@ -467,13 +579,16 @@ class ServingEngine:
         pool cannot supply enough blocks even after registry eviction
         (the caller re-queues the request — FIFO blocking)."""
         P = self._eff_page
-        prompt = np.asarray(req.prompt, np.int32)
-        need = min(len(prompt) + req.max_new_tokens, self._cache_seq)
+        # effective view: a resumed request re-prefills its generated
+        # prefix too, and only its remaining budget still allocates
+        prompt = self._eff_prompt(req)
+        max_new = self._eff_max_new(req)
+        need = min(len(prompt) + max_new, self._cache_seq)
         n_pages = -(-need // P)
         # a request that outgrows the cache wraps its ring cursor back
         # over its own leading pages — those pages must be exclusively
         # owned (no sharing in, no registration out)
-        wraps = len(prompt) + req.max_new_tokens > self._cache_seq
+        wraps = len(prompt) + max_new > self._cache_seq
         shared: List = []
         if self.prefix_cache_enabled and not wraps:
             # longest cached prefix, capped so >= 1 prompt token is
@@ -530,6 +645,199 @@ class ServingEngine:
         blocks = self._slot_blocks[s]
         row[:len(blocks)] = blocks
         return row
+
+    def quarantine_blocks(self, n: int) -> int:
+        """Withhold up to ``n`` free blocks from the allocator (returns
+        how many were taken). Quarantined blocks are a first-class
+        owner class: admissions can't use them, audit() accounts them,
+        ``release_quarantined`` returns them. This is the allocator-
+        exhaustion fault-injection surface, and doubles as an admission
+        headroom reservation."""
+        if not self.paged:
+            return 0
+        n = min(int(n), len(self._free))
+        for _ in range(n):
+            self._quarantined.append(self._free.pop())
+        return n
+
+    def release_quarantined(self, n: Optional[int] = None) -> int:
+        """Return up to ``n`` quarantined blocks (all when None) to the
+        free list; returns how many were released."""
+        k = len(self._quarantined) if n is None else \
+            min(int(n), len(self._quarantined))
+        for _ in range(k):
+            self._free.append(self._quarantined.pop())
+        return k
+
+    def audit(self) -> None:
+        """Invariant checker (raises ``EngineAuditError``): the free
+        list ∪ quarantine ∪ referenced blocks partitions the pool,
+        every refcount equals the number of live references (slot
+        tables + prefix registry), block 0 is never handed out, no
+        request is simultaneously active and queued, and no empty slot
+        holds blocks. Host-side structures only — safe to run between
+        steps even with a megastep in flight."""
+        for s, r in enumerate(self.active):
+            if r is None:
+                continue
+            if r.done or r.cancelled:
+                raise EngineAuditError(
+                    f"slot {s}: active request {r.uid} is already done")
+            if any(q is r for q in self.queue):
+                raise EngineAuditError(
+                    f"request {r.uid} is both active (slot {s}) and "
+                    "queued — a preemption/requeue double-entry")
+        if not self.paged:
+            return
+        refs = np.zeros((self.cache_blocks,), np.int64)
+        for s, blocks in enumerate(self._slot_blocks):
+            if blocks and self.active[s] is None:
+                raise EngineAuditError(
+                    f"slot {s}: empty slot still holds blocks {blocks}")
+            for b in blocks:
+                if not 1 <= b < self.cache_blocks:
+                    raise EngineAuditError(
+                        f"slot {s}: table maps block {b} (0 is the "
+                        "reserved garbage block)")
+                refs[b] += 1
+        for b in self._prefix_reg.values():
+            refs[b] += 1
+        free, quar = set(self._free), set(self._quarantined)
+        if len(free) != len(self._free):
+            raise EngineAuditError("duplicate block in the free list")
+        if len(quar) != len(self._quarantined):
+            raise EngineAuditError("duplicate block in quarantine")
+        if 0 in free or 0 in quar or refs[0] or self._ref[0]:
+            raise EngineAuditError("block 0 escaped the garbage role")
+        for b in range(1, self.cache_blocks):
+            if self._ref[b] != refs[b]:
+                raise EngineAuditError(
+                    f"block {b}: refcount {int(self._ref[b])} != "
+                    f"{int(refs[b])} live references")
+            owners = (b in free) + (b in quar) + (refs[b] > 0)
+            if owners != 1:
+                raise EngineAuditError(
+                    f"block {b}: {owners} owners (free={b in free}, "
+                    f"quarantined={b in quar}, refs={int(refs[b])}) — "
+                    "the pool partition is broken")
+
+    # -- preemption / resume helpers ---------------------------------------
+    def _eff_prompt(self, req: Request) -> np.ndarray:
+        """Admission-time prompt: the original prompt plus any tokens
+        already generated before a preemption. Re-feeding the generated
+        prefix through the same decode path rebuilds the cache
+        bit-identically, so a resumed greedy request continues exactly
+        where an uninterrupted run would."""
+        prompt = np.asarray(req.prompt, np.int32)
+        if not req.output:
+            return prompt
+        return np.concatenate(
+            [prompt, np.asarray(req.output, np.int32)])
+
+    def _eff_max_new(self, req: Request) -> int:
+        """In-slot generation budget: total minus already-emitted."""
+        return req.max_new_tokens - len(req.output)
+
+    def _edf_key(self, req: Request):
+        d = req._deadline_abs if req._deadline_abs is not None else _INF
+        return (d, req._seq)
+
+    def _enqueue(self, req: Request) -> None:
+        """Insert keeping the queue sorted by (deadline, submission
+        order) — plain FIFO when no request carries a deadline."""
+        key = self._edf_key(req)
+        if not self.queue or self._edf_key(self.queue[-1]) <= key:
+            self.queue.append(req)
+            return
+        for i, r in enumerate(self.queue):
+            if self._edf_key(r) > key:
+                self.queue.insert(i, req)
+                return
+        self.queue.append(req)
+
+    def _measured_substep_s(self) -> Optional[float]:
+        """Measured wall seconds per decode substep (None before any
+        megastep has run) — the basis for retry-after hints and the
+        infeasible-deadline shed."""
+        if self.stats.steps == 0 or self.stats.decode_wall_s == 0.0:
+            return None
+        return self.stats.decode_wall_s / self.stats.steps
+
+    def _service_substeps(self, req: Request) -> int:
+        """Substeps a request occupies a slot for: chunked admission
+        rides the prompt in-scan (one token per substep), stall
+        prefills in one dispatch."""
+        gen = max(self._eff_max_new(req), 1)
+        if self.admission == "chunked":
+            return len(self._eff_prompt(req)) + gen
+        return gen
+
+    def _pick_victim(self, incoming: Request) -> Optional[int]:
+        """Preemption victim for a pool-starved admission: only slots
+        whose EDF key is strictly *later* than the incoming request's
+        are eligible (later deadline, or same-class but younger), so a
+        preempted-and-requeued request can never be preempted back by
+        the one that displaced it — no livelock. Among eligible slots:
+        non-shared-prefix first (frees more private blocks, loses no
+        registry value), then least progress (least recompute)."""
+        key = self._edf_key(incoming)
+        cands = [s for s, r in enumerate(self.active)
+                 if r is not None and not r.done
+                 and self._edf_key(r) > key]
+        if not cands:
+            return None
+        return min(cands, key=lambda s: (
+            self._slot_shared[s] > 0,
+            len(self.active[s].output) + self._prefill_pos[s]))
+
+    def _preempt_slot(self, s: int,
+                      admit: Optional[Dict[str, np.ndarray]] = None
+                      ) -> Request:
+        """Evict slot ``s``: freeze its cache through the same
+        PHASE_IDLE path cancel/EOS use (any in-flight megastep keeps
+        emitting its pre-preemption tokens, which the drain appends
+        before the request is readmitted), recycle its private blocks,
+        and requeue the request to recompute from prompt + generated
+        prefix. Clears the slot's staged chunk-refill entry when the
+        admission arrays are already built."""
+        req = self.active[s]
+        self.state = dataclasses.replace(
+            self.state, phase=self.state.phase.at[s].set(PHASE_IDLE))
+        self.active[s] = None
+        self._stochastic_slots.discard(s)
+        self._prefill_pos[s] = 0
+        self._slot_prompt[s] = None
+        if self.paged:
+            self._release_slot_blocks(s)
+        if admit is not None:
+            admit["refill"][s] = False
+            admit["tokens"][s, :] = 0
+            admit["base"][s] = 0
+        req.preemptions += 1
+        self.stats.preemptions += 1
+        self._enqueue(req)
+        return req
+
+    def preempt(self, req: Request) -> bool:
+        """Preempt an active request (the mechanism behind pool-starved
+        admission; also the fault injector's ``preempt`` event).
+        Returns False when the request isn't occupying a slot. The
+        request resumes via the normal queue — token-identical under
+        greedy sampling."""
+        if req.done or req.cancelled:
+            return False
+        for s, r in enumerate(self.active):
+            if r is req:
+                self._preempt_slot(s)
+                return True
+        return False
+
+    def inject_logit_poison(self, req: Request) -> None:
+        """Fault-injection hook: overwrite this request's logits with
+        NaN inside the megastep (while it occupies a slot) so the
+        in-jit finiteness check retires it — the deterministic way to
+        exercise poisoned-request isolation."""
+        self._poison_uids.add(req.uid)
 
     # -- per-request sampling ----------------------------------------------
     def _req_sampling(self, req: Request):
@@ -656,7 +964,11 @@ class ServingEngine:
         ``max_new_tokens=0`` short-circuits to an empty completed
         output (the in-scan path checks ``gen_len >= max_new`` only
         *after* emission, so an admitted zero-budget request would
-        still emit one token)."""
+        still emit one token). Overload rejects are typed (see the
+        module docstring's failure-semantics section): ``PromptTooLong``
+        for prompts that can never fit, ``QueueFull`` at the
+        ``max_queue`` bound, ``InfeasibleDeadline`` when
+        ``req.deadline_s`` can't be met by an empty engine."""
         if len(np.asarray(req.prompt)) == 0:
             raise ValueError(
                 f"request {req.uid}: empty prompt — decode needs at "
@@ -669,17 +981,58 @@ class ServingEngine:
         if req.max_new_tokens == 0:
             req.done = True          # nothing to generate: legal no-op
             return
+        prompt_len = len(np.asarray(req.prompt))
         if self.paged:
-            need = min(len(np.asarray(req.prompt)) + req.max_new_tokens,
-                       self._cache_seq)
+            need = min(prompt_len + req.max_new_tokens, self._cache_seq)
             pages = -(-need // self._eff_page)
             if pages > self.cache_blocks - 1:
-                raise ValueError(
+                raise PromptTooLong(
                     f"request {req.uid}: needs {pages} cache pages but "
                     f"the pool holds {self.cache_blocks - 1} — it can "
                     "never be admitted (raise cache_blocks or shrink "
-                    "the request)")
-        self.queue.append(req)
+                    "the request)", uid=req.uid)
+        elif (not self._has_window
+                and self.cfg.arch_type not in ("ssm", "hybrid")
+                and prompt_len > self._cache_seq):
+            # full-attention dense cache: prefilling past the slot's
+            # rows scatters out of range and corrupts the stream —
+            # reject at admission instead (windowed/recurrent caches
+            # wrap/accumulate legally, paged caches ring over their
+            # own pages)
+            raise PromptTooLong(
+                f"request {req.uid}: prompt of {prompt_len} tokens "
+                f"exceeds the cache capacity {self._cache_seq} "
+                f"(max_len={self.max_len}) — the prefill write would "
+                "corrupt the slot's cache; raise max_len or truncate",
+                uid=req.uid)
+        if self.max_queue and len(self.queue) >= self.max_queue:
+            self.stats.shed += 1
+            sub = self._measured_substep_s()
+            hint = None
+            if sub is not None:
+                backlog = sum(self._service_substeps(r)
+                              for r in self.queue)
+                hint = sub * backlog / max(self.slots, 1)
+            raise QueueFull(
+                f"request {req.uid}: queue at its bound "
+                f"({self.max_queue}) — shed to protect latency; retry "
+                f"after {hint if hint is not None else 'the drain'}",
+                uid=req.uid, retry_after_s=hint,
+                queue_depth=len(self.queue))
+        if req.deadline_s is not None:
+            sub = self._measured_substep_s()
+            est = (sub or 0.0) * self._service_substeps(req)
+            if req.deadline_s <= 0 or est > req.deadline_s:
+                self.stats.shed += 1
+                raise InfeasibleDeadline(
+                    f"request {req.uid}: deadline {req.deadline_s:.3f}s "
+                    f"< estimated service {est:.3f}s even unqueued — "
+                    "shed instead of generating tokens it can't use",
+                    uid=req.uid, queue_depth=len(self.queue))
+            req._deadline_abs = time.monotonic() + req.deadline_s
+        req._seq = self._submit_seq
+        self._submit_seq += 1
+        self._enqueue(req)
 
     def cancel(self, req: Request) -> bool:
         """Retire a request immediately. A queued request is removed
@@ -688,9 +1041,17 @@ class ServingEngine:
         EOS/length path uses, so the remaining substeps of any
         in-flight megastep leave its cache untouched and its late
         tokens are dropped at drain time. The freed slot is refilled
-        at the next admission. Returns True if the request was live."""
+        at the next admission. Returns True if the request was live.
+
+        Cancel composes with preemption: a request cancelled while
+        mid-preemption (requeued, blocks already recycled) takes the
+        queue path below — its slot and blocks were released at
+        preemption time, so nothing double-frees; a request preempted
+        after being cancelled is impossible (``preempt`` refuses
+        cancelled requests)."""
         if req.done:
             return False
+        self._poison_uids.discard(req.uid)
         try:
             self.queue.remove(req)
             req.done = req.cancelled = True
@@ -705,6 +1066,7 @@ class ServingEngine:
                     phase=self.state.phase.at[s].set(PHASE_IDLE))
                 self.active[s] = None
                 self._stochastic_slots.discard(s)
+                self._slot_prompt[s] = None
                 if self.paged:
                     # recycle the slot's blocks; prefix pages shared
                     # with the registry or another slot survive (their
@@ -729,22 +1091,52 @@ class ServingEngine:
 
     def _take_free(self) -> List:
         free = [s for s in range(self.slots) if self.active[s] is None]
-        taken = []
+        # a preempted request still riding an undrained megastep's
+        # occupant snapshot must not be readmitted yet: that drain will
+        # append its pre-preemption tokens, and a premature resume
+        # would re-generate them (duplicated output, early retirement)
+        pending = {id(r) for _, occ in self._inflight
+                   for r in occ if r is not None}
+        taken, held = [], []
         while free and self.queue:
-            taken.append((free.pop(0), self.queue.popleft()))
+            req = self.queue.popleft()
+            # a preempted-then-finished (or late-cancelled) request can
+            # still sit in the queue: drop it without burning a slot
+            if req.done or req.cancelled:
+                continue
+            if id(req) in pending:
+                held.append(req)     # resume after its block drains
+                continue
+            taken.append((free.pop(0), req))
+        # held requests were popped from the head, so putting them back
+        # at the head in order preserves the EDF sort
+        self.queue.extendleft(reversed(held))
         return taken
 
     def _fill_slots_stall(self) -> None:
         """PR-1 admission: length-bucketed prefill dispatches that run
-        between megasteps — and stall every decoding slot meanwhile."""
+        between megasteps — and stall every decoding slot meanwhile.
+        Resumed (preempted) requests prefill their prompt + generated
+        prefix and keep only their remaining budget in-slot."""
         taken = self._take_free()
         if self.paged and taken:
             # allocate block tables up front; a request the pool cannot
-            # serve goes back to the queue head (FIFO blocking — later
+            # serve preempts an eligible victim (see _pick_victim) or
+            # goes back to the queue head (FIFO blocking — later
             # requests must not jump an admission-starved head)
             admitted, putback = [], []
             for s, req in taken:
-                if putback or self._admit_paged(s, req) is None:
+                if putback:
+                    putback.append(req)
+                    continue
+                res = self._admit_paged(s, req)
+                while res is None:
+                    v = self._pick_victim(req)
+                    if v is None:
+                        break
+                    self._preempt_slot(v)
+                    res = self._admit_paged(s, req)
+                if res is None:
                     putback.append(req)
                 else:
                     admitted.append((s, req))
@@ -754,22 +1146,24 @@ class ServingEngine:
             return
         buckets: Dict[int, List] = {}
         for s, req in taken:
-            buckets.setdefault(self._bucket_len(len(req.prompt)),
-                               []).append((s, req))
+            p = self._eff_prompt(req)
+            buckets.setdefault(self._bucket_len(len(p)),
+                               []).append((s, req, p))
         for blen, group in buckets.items():
             toks = np.full((len(group), blen), PAD_ID, np.int32)
-            for i, (_, req) in enumerate(group):
-                toks[i, :len(req.prompt)] = req.prompt
-            lens = np.asarray([len(r.prompt) for _, r in group], np.int32)
-            slot_idx = np.asarray([s for s, _ in group], np.int32)
-            maxnew = np.asarray([r.max_new_tokens for _, r in group],
-                                np.int32)
-            eos = np.asarray([r.eos_id for _, r in group], np.int32)
-            smp = [self._req_sampling(r) for _, r in group]
+            for i, (_, _, p) in enumerate(group):
+                toks[i, :len(p)] = p
+            lens = np.asarray([len(p) for _, _, p in group], np.int32)
+            slot_idx = np.asarray([s for s, _, _ in group], np.int32)
+            maxnew = np.asarray([self._eff_max_new(r)
+                                 for _, r, _ in group], np.int32)
+            eos = np.asarray([r.eos_id for _, r, _ in group], np.int32)
+            smp = [self._req_sampling(r) for _, r, _ in group]
             temp = np.asarray([v[0] for v in smp], np.float32)
             topk = np.asarray([v[1] for v in smp], np.int32)
             topp = np.asarray([v[2] for v in smp], np.float32)
-            rows = (np.stack([self._slot_table_row(s) for s, _ in group])
+            rows = (np.stack([self._slot_table_row(s)
+                              for s, _, _ in group])
                     if self.paged
                     else np.zeros((len(group), 0), np.int32))
             first, self.cache, self.state = self._prefill(
@@ -781,12 +1175,12 @@ class ServingEngine:
             first = np.asarray(first)
             self.stats.prefill_batches += 1
 
-            for i, (s, req) in enumerate(group):
+            for i, (s, req, p) in enumerate(group):
                 tok = int(first[i])
                 req.output.append(tok)
                 self.stats.prefills += 1
                 self.stats.tokens_generated += 1
-                self._prefill_pos[s] = len(req.prompt)
+                self._prefill_pos[s] = len(p)
                 if tok == req.eos_id or len(req.output) >= \
                         req.max_new_tokens:
                     req.done = True       # first token already ends it
@@ -794,6 +1188,7 @@ class ServingEngine:
                         self._release_slot_blocks(s)
                 else:
                     self.active[s] = req
+                    self._slot_prompt[s] = p
                     if self._req_sampling(req)[0] > 0.0:
                         self._stochastic_slots.add(s)
 
@@ -808,7 +1203,12 @@ class ServingEngine:
                  "eos": np.full((n,), -1, np.int32),
                  "temp": np.zeros((n,), np.float32),
                  "top_k": np.zeros((n,), np.int32),
-                 "top_p": np.ones((n,), np.float32)}
+                 "top_p": np.ones((n,), np.float32),
+                 # slots whose logits the fault injector corrupts
+                 # in-jit (NaN) this megastep — exercises the same
+                 # finiteness-retirement path a real nonfinite model
+                 # output would take
+                 "poison": np.zeros((n,), bool)}
         if self.paged:
             # fresh slots' admission start (cached-prefix length) and
             # block-table rows ride the same megastep arguments
@@ -826,15 +1226,18 @@ class ServingEngine:
         admit = self._empty_admit()
         chunk = self.prefill_chunk
         # refresh the chunk window for slots still consuming a prompt
+        # (windowed over the admitted effective prompt — a resumed
+        # request's live fields keep growing during decode)
         for s, req in enumerate(self.active):
             if req is None:
                 continue
             pos = self._prefill_pos[s]
-            if pos >= len(req.prompt):
+            prompt = self._slot_prompt[s]
+            if prompt is None or pos >= len(prompt):
                 continue
             admit["refill"][s] = True
             admit["base"][s] = pos
-            seg = req.prompt[pos:pos + chunk]
+            seg = prompt[pos:pos + chunk]
             admit["tokens"][s, :len(seg)] = seg
             if pos > 0:
                 self.stats.chunk_refills += 1
@@ -842,11 +1245,21 @@ class ServingEngine:
         putback: List[Request] = []
         for s, req in self._take_free():
             start = 0
+            prompt = self._eff_prompt(req)
             if self.paged:
                 if putback:
                     putback.append(req)   # FIFO: stay behind the
                     continue              # blocked head
                 res = self._admit_paged(s, req)
+                while res is None:
+                    # pool exhausted even after registry eviction:
+                    # preempt an eligible victim (strictly later EDF
+                    # key — see _pick_victim) or block FIFO
+                    v = self._pick_victim(req)
+                    if v is None:
+                        break
+                    self._preempt_slot(v, admit)
+                    res = self._admit_paged(s, req)
                 if res is None:           # pool exhausted: re-queue
                     putback.append(req)
                     continue
@@ -855,16 +1268,17 @@ class ServingEngine:
                 admit["block_table"][s] = self._slot_table_row(s)
             admit["new"][s] = True
             admit["base"][s] = start
-            seg = req.prompt[start:start + chunk]
+            seg = prompt[start:start + chunk]
             admit["tokens"][s, :len(seg)] = seg
-            admit["prompt_len"][s] = len(req.prompt)
-            admit["max_new"][s] = req.max_new_tokens
+            admit["prompt_len"][s] = len(prompt)
+            admit["max_new"][s] = self._eff_max_new(req)
             admit["eos"][s] = req.eos_id
             temp, topk, topp = self._req_sampling(req)
             admit["temp"][s] = temp
             admit["top_k"][s] = topk
             admit["top_p"][s] = topp
             self.active[s] = req
+            self._slot_prompt[s] = prompt
             self._prefill_pos[s] = start
             if temp > 0.0:
                 self._stochastic_slots.add(s)
@@ -876,9 +1290,15 @@ class ServingEngine:
 
     def _fill_slots(self) -> Dict[str, np.ndarray]:
         if self.admission == "chunked":
-            return self._fill_slots_chunked()
-        self._fill_slots_stall()
-        return self._empty_admit()
+            admit = self._fill_slots_chunked()
+        else:
+            self._fill_slots_stall()
+            admit = self._empty_admit()
+        if self._poison_uids:
+            for s, r in enumerate(self.active):
+                if r is not None and r.uid in self._poison_uids:
+                    admit["poison"][s] = True
+        return admit
 
     # -- fused K-token decode + in-scan admission ---------------------------
     def _merge_admissions(self, cache, st: SlotState, admit):
@@ -941,10 +1361,21 @@ class ServingEngine:
         their chunk buffer instead of ``last_token`` and stay silent
         until the last prompt position. ``all_greedy`` (static) traces
         a pure-argmax sampler when no active slot is stochastic.
-        Returns (cache, state, block (3, K, slots) = tokens / emitted /
-        prefill progress)."""
+
+        Every substep checks per-slot logits for NaN/inf: a nonfinite
+        slot emits nothing, is forced to PHASE_IDLE (so subsequent
+        substeps freeze its cache writes — the same retirement path EOS
+        takes), and is flagged in the packed block's fourth row for the
+        host to error-retire. Other slots in the batch are untouched —
+        their logits, sampling, and cache writes never see the bad
+        slot's values. ``admit["poison"]`` lets the fault injector
+        corrupt a slot's logits in-jit to exercise exactly this path.
+
+        Returns (cache, state, block (4, K, slots) = tokens / emitted /
+        prefill progress / nonfinite flag)."""
         cache, state = self._merge_admissions(cache, state, admit)
         chunk = self.prefill_chunk
+        poison = jnp.asarray(admit["poison"])
 
         def body(carry, _):
             cache, st = carry
@@ -962,6 +1393,11 @@ class ServingEngine:
             advance = feeding | is_dec
             logits, cache = self.model.decode_step(
                 params, in_tok[:, None], cache, advance_mask=advance)
+            logits = jnp.where(poison[:, None],
+                               jnp.full((), jnp.nan, logits.dtype),
+                               logits)
+            finite = jnp.all(jnp.isfinite(logits), axis=-1)
+            bad = (is_pre | is_dec) & ~finite
             rng, step_key = jax.random.split(st.rng)
             if all_greedy:
                 tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
@@ -969,7 +1405,7 @@ class ServingEngine:
                 tok = sample_batched(logits, step_key, st.temperature,
                                      st.top_k, st.top_p)
             finishing = feeding & (st.prefill_pos + 1 >= st.prompt_len)
-            emit = is_dec | finishing
+            emit = (is_dec | finishing) & ~bad
             tok = jnp.where(emit, tok, jnp.int32(PAD_ID))
             gen_len = st.gen_len + emit.astype(jnp.int32)
             done_now = emit & ((tok == st.eos_id) |
@@ -977,6 +1413,10 @@ class ServingEngine:
             phase = jnp.where(
                 emit, jnp.where(done_now, PHASE_IDLE, PHASE_DECODE),
                 st.phase)
+            # a nonfinite slot retires through the frozen-write path:
+            # IDLE phase means every later substep's advance mask and
+            # emit mask exclude it, exactly like EOS
+            phase = jnp.where(bad, PHASE_IDLE, phase)
             new_st = dataclasses.replace(
                 st,
                 last_token=jnp.where(emit, tok, st.last_token),
@@ -984,15 +1424,16 @@ class ServingEngine:
                 phase=phase,
                 prefill_pos=st.prefill_pos + feeding.astype(jnp.int32),
                 rng=rng)
-            return (cache, new_st), (tok, emit, new_st.prefill_pos)
+            return (cache, new_st), (tok, emit, new_st.prefill_pos, bad)
 
-        (cache, state), (toks, emitted, pos) = jax.lax.scan(
+        (cache, state), (toks, emitted, pos, flagged) = jax.lax.scan(
             body, (cache, state), None, length=self.megastep_k,
             unroll=self.megastep_unroll)
-        # pack (tokens, emitted, prefill progress) into one
-        # (3, K, slots) block → a single device→host transfer
+        # pack (tokens, emitted, prefill progress, nonfinite flags)
+        # into one (4, K, slots) block → a single device→host transfer
         return cache, state, jnp.stack(
-            [toks, emitted.astype(jnp.int32), pos])
+            [toks, emitted.astype(jnp.int32), pos,
+             flagged.astype(jnp.int32)])
 
     def _dispatch_megastep(self) -> bool:
         """Dispatch half of the pipelined loop: stage admissions from
@@ -1028,12 +1469,16 @@ class ServingEngine:
         self.stats.drain_wait_s += time.perf_counter() - t0
         toks, emitted = block[0], block[1].astype(bool)
         last_pos = block[2][-1]
+        bad = block[3].astype(bool).any(axis=0)
         for s in range(self.slots):
             # advance the prompt-cursor mirror only while the slot
             # still serves the request this block belongs to — a stale
             # pos row from a retired occupant must never leak into a
-            # newer request's chunk-refill base
-            if occupants[s] is not None and self.active[s] is occupants[s]:
+            # newer request's chunk-refill base. Nonfinite slots are
+            # about to be error-retired: don't advance their mirror or
+            # publish their pages to the prefix registry.
+            if (occupants[s] is not None and not bad[s]
+                    and self.active[s] is occupants[s]):
                 self._prefill_pos[s] = int(last_pos[s])
                 # prompt fully consumed → its pages now exist on
                 # device: publish them to the prefix registry
@@ -1056,8 +1501,30 @@ class ServingEngine:
                     if self.active[s] is req:
                         self.active[s] = None
                         self._stochastic_slots.discard(s)
+                        self._slot_prompt[s] = None
                         if self.paged:
                             self._release_slot_blocks(s)
+        # error-retire slots the device flagged nonfinite: the scan
+        # already froze them (no emit, no cache writes past the flag),
+        # the host marks the request failed and recycles its slot.
+        # Tokens the request emitted *before* the poison landed were
+        # appended above — the error reports what it got.
+        for s in range(self.slots):
+            if not bad[s]:
+                continue
+            req = occupants[s]
+            if req is None or req.done or req.cancelled:
+                continue
+            req.error = "nonfinite-logits"
+            req.done = True
+            self.stats.poisoned += 1
+            self._poison_uids.discard(req.uid)
+            if self.active[s] is req:
+                self.active[s] = None
+                self._stochastic_slots.discard(s)
+                self._slot_prompt[s] = None
+                if self.paged:
+                    self._release_slot_blocks(s)
 
     def step(self) -> int:
         """Admit what fits, dispatch one megastep (up to ``megastep_k``
@@ -1077,6 +1544,8 @@ class ServingEngine:
             while self._inflight:
                 self._drain_oldest()
         self.stats.decode_wall_s += time.perf_counter() - t0
+        if self.audit_every_step:
+            self.audit()
         return sum(r is not None for r in self.active)
 
     def run(self, max_steps: int = 10000) -> None:

@@ -1,0 +1,192 @@
+"""Chaos property suite: seeded fault schedules against the serving
+engine, across {dense, paged} x pipeline_depth {1, 2} x K {1, 8}.
+
+Every example draws a reproducible ``FaultSchedule`` (allocator
+exhaustion, forced preemption, poisoned logits, host stalls, transient
+step exceptions) and replays a random request batch under it with
+``engine.audit()`` asserted after *every* step. The contract:
+
+- the audit invariants hold throughout the storm (free list ∪
+  quarantine ∪ block tables partitions the pool, refcounts match
+  references, block 0 stays the garbage block);
+- no blocks leak — after the drain the pool is fully recoverable;
+- surviving requests (not poisoned, not cancelled) finish greedy
+  token-identical to ``Model.reference_decode`` — preempted-and-
+  resumed ones included;
+- a poisoned request error-retires with ``nonfinite-logits`` and its
+  pre-poison tokens are a clean prefix of the reference stream.
+
+Runs under ``tests/_hypothesis_compat`` (seeded, deterministic).
+Marked ``chaos``; ``scripts/run_tier1.sh`` runs a separate one-shot
+smoke for the exhaustion+poison+recovery path.
+"""
+import jax
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+
+from repro.configs import get_config, reduced
+from repro.models import Model
+from repro.serving import (FaultEvent, FaultInjector, FaultSchedule,
+                           Request, ServingEngine)
+
+pytestmark = pytest.mark.chaos
+
+_STATE = {}
+
+
+def _model():
+    if "m" not in _STATE:
+        cfg = reduced(get_config("deepseek-7b"), d_model=64, d_ff=128,
+                      vocab_size=256, num_heads=2, num_kv_heads=1)
+        m = Model(cfg)
+        _STATE["m"] = (cfg, m, m.init(jax.random.PRNGKey(0)))
+    return _STATE["m"]
+
+
+def _engine(mode, k) -> ServingEngine:
+    key = (mode, k)
+    if key not in _STATE:
+        cfg, m, params = _model()
+        kw = dict(slots=3, max_len=64, megastep_k=k, prefill_chunk=16)
+        if mode == "paged":
+            # 12 usable blocks, <= 4 pages/request: full backing for
+            # the 3 slots — contention comes from the exhaust_pool
+            # fault quarantining blocks mid-flight
+            kw.update(page_size=8, cache_blocks=13)
+        _STATE[key] = ServingEngine(m, params, **kw)
+    eng = _STATE[key]
+    eng.reset()
+    eng.pipeline_depth = 1
+    return eng
+
+
+def _random_requests(cfg, rng, n):
+    return [Request(
+        uid=i,
+        prompt=rng.integers(1, cfg.vocab_size, size=int(
+            rng.integers(2, 14))).astype(np.int32),
+        max_new_tokens=int(rng.integers(1, 12)))
+        for i in range(n)]
+
+
+def _check_outcome(m, params, eng, reqs):
+    assert not eng.has_work()
+    if eng.paged:
+        # pool fully recoverable: nothing quarantined, nothing leaked
+        assert not eng._quarantined
+        assert eng.blocks_in_use == len(eng._prefix_reg)
+    for r in reqs:
+        assert r.done
+        ref = m.reference_decode(params, r.prompt, r.max_new_tokens)
+        if r.error is not None:
+            assert r.error == "nonfinite-logits"
+            # pre-poison tokens are a clean prefix of the reference
+            assert r.output == ref[:len(r.output)], r.uid
+        else:
+            assert r.output == ref, (r.uid, r.output, ref)
+
+
+@given(st.integers(0, 2 ** 31 - 1), st.sampled_from(["dense", "paged"]),
+       st.sampled_from([1, 2]), st.sampled_from([1, 8]))
+@settings(max_examples=12, deadline=None)
+def test_chaos_schedule_survivors_match_reference(seed, mode, depth, k):
+    cfg, m, params = _model()
+    rng = np.random.default_rng(seed)
+    reqs = _random_requests(cfg, rng, int(rng.integers(2, 6)))
+    sched = FaultSchedule.seeded(seed, n_requests=len(reqs),
+                                 paged=(mode == "paged"))
+    eng = _engine(mode, k)
+    eng.pipeline_depth = depth
+    for r in reqs:
+        eng.submit(r)
+    inj = FaultInjector(eng, sched, audit=True, backoff_s=0.0,
+                        sleep=lambda s: None)
+    inj.run(reqs)
+    _check_outcome(m, params, eng, reqs)
+
+
+@given(st.integers(0, 2 ** 31 - 1), st.sampled_from(["dense", "paged"]),
+       st.sampled_from([1, 2]))
+@settings(max_examples=6, deadline=None)
+def test_repeated_preemption_stays_token_identical(seed, mode, depth):
+    """Preempt the same request on several consecutive steps: each
+    resume re-prefills prompt + generated prefix and must land on the
+    uninterrupted greedy stream."""
+    cfg, m, params = _model()
+    rng = np.random.default_rng(seed)
+    reqs = _random_requests(cfg, rng, 3)
+    tgt = int(rng.integers(0, len(reqs)))
+    sched = FaultSchedule([FaultEvent(s, "preempt", ridx=tgt)
+                           for s in (1, 3, 5)])
+    eng = _engine(mode, 8)
+    eng.pipeline_depth = depth
+    for r in reqs:
+        eng.submit(r)
+    FaultInjector(eng, sched, audit=True,
+                  sleep=lambda s: None).run(reqs)
+    _check_outcome(m, params, eng, reqs)
+    assert all(r.error is None for r in reqs)
+
+
+@given(st.integers(0, 2 ** 31 - 1), st.sampled_from([1, 8]))
+@settings(max_examples=6, deadline=None)
+def test_pool_exhaustion_storm_recovers(seed, k):
+    """Quarantine most of the pool mid-flight, repeatedly: admissions
+    must block/putback (never corrupt), and the stream must complete
+    token-identical once blocks return."""
+    cfg, m, params = _model()
+    rng = np.random.default_rng(seed)
+    reqs = _random_requests(cfg, rng, 5)
+    sched = FaultSchedule([
+        FaultEvent(0, "exhaust_pool", blocks=int(rng.integers(6, 12)),
+                   duration=2),
+        FaultEvent(3, "exhaust_pool", blocks=int(rng.integers(2, 8)),
+                   duration=1),
+    ])
+    eng = _engine("paged", k)
+    for r in reqs:
+        eng.submit(r)
+    FaultInjector(eng, sched, audit=True,
+                  sleep=lambda s: None).run(reqs)
+    _check_outcome(m, params, eng, reqs)
+
+
+@given(st.integers(0, 2 ** 31 - 1), st.sampled_from(["dense", "paged"]),
+       st.sampled_from([1, 2]))
+@settings(max_examples=6, deadline=None)
+def test_poison_isolates_survivors_bytewise(seed, mode, depth):
+    """Run the same batch with and without one poisoned request: the
+    survivors' token streams must be byte-identical — the poisoned
+    slot's NaN never contaminates a co-batched request."""
+    cfg, m, params = _model()
+    rng = np.random.default_rng(seed)
+    reqs = _random_requests(cfg, rng, 4)
+    tgt = int(rng.integers(0, len(reqs)))
+
+    # clean pass
+    eng = _engine(mode, 8)
+    eng.pipeline_depth = depth
+    clean = [Request(uid=r.uid, prompt=r.prompt,
+                     max_new_tokens=r.max_new_tokens) for r in reqs]
+    for r in clean:
+        eng.submit(r)
+    eng.run()
+    eng.audit()
+
+    # poisoned pass, same engine (reset keeps compiled executables)
+    eng.reset()
+    eng.pipeline_depth = depth
+    # inject before the first step: the poison sticks to the uid, so
+    # it fires at whichever megastep first serves the target
+    sched = FaultSchedule([FaultEvent(0, "poison_logits", ridx=tgt)])
+    for r in reqs:
+        eng.submit(r)
+    FaultInjector(eng, sched, audit=True,
+                  sleep=lambda s: None).run(reqs)
+    _check_outcome(m, params, eng, reqs)
+    assert reqs[tgt].error == "nonfinite-logits"
+    for rc, rp in zip(clean, reqs):
+        if rp.error is None:
+            assert rp.output == rc.output, rp.uid
